@@ -1,0 +1,77 @@
+//! Conformal anomaly detection on streaming trajectory-like data — the
+//! Laxhammar & Falkman (2010) use case the paper's Simplified k-NN
+//! measure targets (§3, §9), with the optimized measure making each
+//! query O(n) and online learning cheap.
+//!
+//! Scenario: a sensor emits 2-D positions from two normal modes; we
+//! train the detector on normal traffic, then stream a mix of normal
+//! points and injected anomalies, learning confirmed-normal points
+//! online as we go.
+//!
+//! ```sh
+//! cargo run --release --example anomaly_detection
+//! ```
+
+use exact_cp::cluster::AnomalyDetector;
+use exact_cp::data::Rng;
+use exact_cp::measures::knn::KnnOptimized;
+
+/// Two-mode normal traffic around (0,0) and (6,6).
+fn normal_point(rng: &mut Rng) -> [f64; 2] {
+    let mode = rng.below(2) as f64 * 6.0;
+    [mode + 0.8 * rng.normal(), mode + 0.8 * rng.normal()]
+}
+
+fn main() {
+    let mut rng = Rng::seed_from(2026);
+    // 1. Train on 600 normal observations.
+    let train: Vec<f64> = (0..600).flat_map(|_| normal_point(&mut rng)).collect();
+    let eps = 0.05; // guaranteed <= 5% false-alarm rate
+    let t0 = std::time::Instant::now();
+    let mut det = AnomalyDetector::train(KnnOptimized::new(10, true), &train, 2, eps);
+    println!("trained detector on 600 normal points in {:?}", t0.elapsed());
+
+    // 2. Stream 300 points; every 10th is an injected anomaly.
+    let (mut tp, mut fp, mut fnn, mut tn) = (0, 0, 0, 0);
+    let t0 = std::time::Instant::now();
+    for i in 0..300 {
+        let (pt, is_anomaly) = if i % 10 == 9 {
+            // anomaly: far off the normal modes
+            ([12.0 + rng.normal(), -6.0 + rng.normal()], true)
+        } else {
+            (normal_point(&mut rng), false)
+        };
+        let flagged = det.is_anomaly(&pt);
+        match (flagged, is_anomaly) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, true) => fnn += 1,
+            (false, false) => {
+                tn += 1;
+                // confirmed normal: learn it online (O(n) with the
+                // optimized measure — §9's online setting)
+                det.learn(&pt);
+            }
+        }
+    }
+    let elapsed = t0.elapsed();
+    println!(
+        "streamed 300 points in {elapsed:?} ({:?}/point, detector grew to \
+         {} references online)",
+        elapsed / 300,
+        600 + tn
+    );
+    println!("  true alarms   : {tp}/30");
+    println!("  missed        : {fnn}/30");
+    println!(
+        "  false alarms  : {fp}/270 = {:.1}% (guarantee <= {:.0}%)",
+        100.0 * fp as f64 / 270.0,
+        eps * 100.0
+    );
+    println!("  true negatives: {tn}");
+    assert!(
+        (fp as f64 / 270.0) < eps + 0.05,
+        "false alarm rate should respect the conformal guarantee"
+    );
+    assert!(tp >= 25, "detector should catch most injected anomalies");
+}

@@ -1,0 +1,81 @@
+//! Quickstart: train an optimized full-CP classifier, predict with
+//! coverage guarantees, and see the paper's speedup first hand.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use exact_cp::cp::classifier::FullCp;
+use exact_cp::data::{make_classification, ClassificationSpec, Rng};
+use exact_cp::measures::knn::{KnnOptimized, KnnStandard};
+
+fn main() {
+    // 1. A binary classification workload (the paper's §7 setup).
+    let all = make_classification(
+        &ClassificationSpec {
+            n_samples: 2_100,
+            n_features: 30,
+            ..Default::default()
+        },
+        42,
+    );
+    let mut rng = Rng::seed_from(7);
+    let (train, test) = all.split(2_000, &mut rng);
+
+    // 2. Full CP with the optimized k-NN measure: O(n^2) train,
+    //    O(n) per prediction (paper §3.1).
+    let t0 = std::time::Instant::now();
+    let cp = FullCp::train(KnnOptimized::new(15, false), &train);
+    println!("trained optimized k-NN CP on n=2000 in {:?}", t0.elapsed());
+
+    // 3. Set predictions with a 90% coverage guarantee.
+    let eps = 0.1;
+    let mut covered = 0;
+    let mut set_sizes = 0usize;
+    let t0 = std::time::Instant::now();
+    for i in 0..test.n() {
+        let set = cp.predict_set(test.row(i), eps);
+        covered += set.contains(&test.y[i]) as usize;
+        set_sizes += set.len();
+        if i < 5 {
+            let f = cp.forced(test.row(i));
+            println!(
+                "  x[{i}]: set={set:?} true={} forced={} cred={:.2} conf={:.2}",
+                test.y[i], f.label, f.credibility, f.confidence
+            );
+        }
+    }
+    let per_pred = t0.elapsed() / test.n() as u32;
+    println!(
+        "eps={eps}: coverage {}/{} (guarantee >= {:.0}%), avg set size {:.2}, \
+         {per_pred:?}/prediction",
+        covered,
+        test.n(),
+        (1.0 - eps) * 100.0,
+        set_sizes as f64 / test.n() as f64,
+    );
+
+    // 4. The point of the paper: the standard measure computes the SAME
+    //    p-values at ~n times the cost. Check on a subset.
+    let small = {
+        let mut rng = Rng::seed_from(8);
+        let (s, _) = train.split(300, &mut rng);
+        s
+    };
+    let cp_std = FullCp::train(KnnStandard::new(15, false), &small);
+    let cp_opt = FullCp::train(KnnOptimized::new(15, false), &small);
+    let x = test.row(0);
+    let t0 = std::time::Instant::now();
+    let p_std = cp_std.p_values(x);
+    let t_std = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let p_opt = cp_opt.p_values(x);
+    let t_opt = t0.elapsed();
+    assert_eq!(p_std, p_opt, "exactness: identical p-values");
+    println!(
+        "exactness check at n=300: p-values identical ({p_opt:?}); \
+         standard {t_std:?} vs optimized {t_opt:?} \
+         ({:.0}x speedup on one prediction)",
+        t_std.as_secs_f64() / t_opt.as_secs_f64().max(1e-9)
+    );
+}

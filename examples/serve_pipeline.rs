@@ -1,0 +1,183 @@
+//! END-TO-END driver: proves all three layers compose on a real small
+//! workload (recorded in EXPERIMENTS.md §End-to-end).
+//!
+//!   L1/L2 (build time): `make artifacts` lowered the Pallas distance /
+//!         KDE kernels through JAX to HLO text;
+//!   runtime: this binary loads them over the PJRT C API and routes the
+//!         optimized measures' distance hot-spot through them;
+//!   L3:   the coordinator trains two deployments, starts the TCP
+//!         server with dynamic batching, and this driver plays client:
+//!         concurrent batched prediction requests plus online
+//!         learn/unlearn, reporting latency and throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_pipeline
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use exact_cp::config::{MeasureConfig, MeasureKind, ServeConfig};
+use exact_cp::coordinator::factory::select_engine;
+use exact_cp::coordinator::server::{serve, Server};
+use exact_cp::coordinator::state::{Deployment, Registry};
+use exact_cp::cp::metrics::coverage;
+use exact_cp::data::{make_classification, ClassificationSpec, Rng};
+use exact_cp::util::json::Json;
+
+const N_TRAIN: usize = 2_000;
+const N_CLIENTS: usize = 4;
+const REQS_PER_CLIENT: usize = 50;
+const EPS: f64 = 0.1;
+
+fn main() {
+    // ---- L1/L2 artifacts -> runtime engine --------------------------
+    let engine = select_engine(true, "artifacts");
+    println!("distance engine: {}", engine.name());
+    if engine.name() != "pjrt" {
+        println!("  (run `make artifacts` first for the PJRT/Pallas path)");
+    }
+
+    // ---- workload + deployments -------------------------------------
+    let all = make_classification(
+        &ClassificationSpec {
+            n_samples: N_TRAIN + N_CLIENTS * REQS_PER_CLIENT,
+            n_features: 30,
+            ..Default::default()
+        },
+        1,
+    );
+    let mut rng = Rng::seed_from(2);
+    let (train, test) = all.split(N_TRAIN, &mut rng);
+    let cfg = MeasureConfig::default();
+    let registry = Arc::new(Registry::new());
+    for (name, kind) in [
+        ("sknn", MeasureKind::SimplifiedKnn),
+        ("kde", MeasureKind::Kde),
+    ] {
+        let t0 = std::time::Instant::now();
+        registry.insert(Deployment::train(
+            name,
+            kind,
+            &cfg,
+            &train,
+            Some(engine.clone()),
+        ));
+        println!("deployment {name:<5} trained on n={N_TRAIN} in {:?}", t0.elapsed());
+    }
+
+    // ---- L3 server ---------------------------------------------------
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 2,
+            max_batch: 16,
+            max_wait_us: 500,
+            ..Default::default()
+        },
+        registry,
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv = server.clone();
+    let server_thread = std::thread::spawn(move || serve(srv, listener));
+    println!("coordinator serving on {addr}");
+
+    // ---- concurrent clients ------------------------------------------
+    let t0 = std::time::Instant::now();
+    let results: Vec<(Vec<Vec<f64>>, Vec<usize>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..N_CLIENTS {
+            let test = &test;
+            handles.push(s.spawn(move || {
+                let mut conn = TcpStream::connect(addr).unwrap();
+                let mut reader =
+                    BufReader::new(conn.try_clone().unwrap());
+                let mut p_rows = Vec::new();
+                let mut truths = Vec::new();
+                for r in 0..REQS_PER_CLIENT {
+                    let i = c * REQS_PER_CLIENT + r;
+                    let dep = if i % 2 == 0 { "sknn" } else { "kde" };
+                    let req = Json::obj(vec![
+                        ("op", Json::Str("predict".into())),
+                        ("deployment", Json::Str(dep.into())),
+                        ("x", Json::from_f64_slice(test.row(i))),
+                        ("epsilon", Json::Num(EPS)),
+                        ("id", Json::Num(i as f64)),
+                    ]);
+                    conn.write_all(req.encode().as_bytes()).unwrap();
+                    conn.write_all(b"\n").unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let resp = Json::parse(line.trim()).unwrap();
+                    p_rows.push(
+                        resp.get("p_values").unwrap().as_f64_vec().unwrap(),
+                    );
+                    truths.push(test.y[i]);
+                }
+                (p_rows, truths)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed();
+    let total_reqs = N_CLIENTS * REQS_PER_CLIENT;
+
+    // ---- online updates through the wire -----------------------------
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut rpc = |req: Json| -> Json {
+        conn.write_all(req.encode().as_bytes()).unwrap();
+        conn.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+    let learn = rpc(Json::obj(vec![
+        ("op", Json::Str("learn".into())),
+        ("deployment", Json::Str("sknn".into())),
+        ("x", Json::from_f64_slice(test.row(0))),
+        ("y", Json::Num(test.y[0] as f64)),
+    ]));
+    assert_eq!(learn.get("n_train").unwrap().as_f64(), Some((N_TRAIN + 1) as f64));
+    let unlearn = rpc(Json::obj(vec![
+        ("op", Json::Str("unlearn".into())),
+        ("deployment", Json::Str("sknn".into())),
+        ("index", Json::Num(N_TRAIN as f64)),
+    ]));
+    assert_eq!(unlearn.get("n_train").unwrap().as_f64(), Some(N_TRAIN as f64));
+    println!("online learn/unlearn round-trip ✓");
+
+    let stats = rpc(Json::parse(r#"{"op":"stats"}"#).unwrap());
+    let _ = rpc(Json::parse(r#"{"op":"shutdown"}"#).unwrap());
+    server_thread.join().unwrap().unwrap();
+
+    // ---- report -------------------------------------------------------
+    let mut p_matrix = Vec::new();
+    let mut truth = Vec::new();
+    for (rows, ts) in results {
+        p_matrix.extend(rows);
+        truth.extend(ts);
+    }
+    let cov = coverage(&p_matrix, &truth, EPS);
+    println!("\n== end-to-end report ==");
+    println!("requests        : {total_reqs} over {N_CLIENTS} connections");
+    println!("wall time       : {wall:?}");
+    println!(
+        "throughput      : {:.0} predictions/s",
+        total_reqs as f64 / wall.as_secs_f64()
+    );
+    for key in ["mean_batch_size", "mean_latency_us", "p50_latency_us", "p99_latency_us"] {
+        println!(
+            "{key:<16}: {:.1}",
+            stats.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+        );
+    }
+    println!(
+        "coverage        : {:.1}% at eps={EPS} (guarantee >= {:.0}%)",
+        cov * 100.0,
+        (1.0 - EPS) * 100.0
+    );
+    assert!(cov >= 1.0 - EPS - 0.08, "conformal guarantee violated");
+    println!("end-to-end pipeline OK ✓");
+}

@@ -1,0 +1,83 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Runs once via `make artifacts`; the Rust runtime then loads
+`artifacts/<name>.hlo.txt` with `HloModuleProto::from_text_file` and
+compiles it on the PJRT CPU client. Python is never on the request path.
+
+Interchange format is HLO TEXT, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README).
+
+A manifest (artifacts/manifest.json) records every artifact's entry name,
+argument shapes, and output shapes so the Rust registry can bucket-match
+without re-parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_sig(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    # Back-compat with the original Makefile single-file interface: if
+    # --out is given, we treat its dirname as the artifact dir and still
+    # emit the whole bucketed set plus that marker file.
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, example_args in model.entry_points():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [shape_sig(a) for a in example_args],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(f"  wrote {path} ({len(text)} bytes)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if args.out:
+        # Marker for the Makefile dependency (model.hlo.txt): point it at
+        # the canonical dist_row artifact so `make -q artifacts` works.
+        smallest = f"dist_row_n{model.ROW_BUCKETS[0]}_p{model.P_BUCKETS[0]}"
+        with open(args.out, "w") as f:
+            f.write(open(os.path.join(out_dir, f"{smallest}.hlo.txt")).read())
+    print(f"manifest: {len(manifest)} artifacts -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: fused Gaussian-KDE contribution row.
+
+For the KDE nonconformity measure (paper §4) the prediction-phase update
+needs, for a test point x, the vector
+
+    k[i] = exp( -||x - x_i||^2 / (2 h^2) )
+
+over all training points (the unnormalized Gaussian kernel; the measure's
+1/(n_y h^p) normalization and label masking happen in the Rust
+coordinator, which owns the label bookkeeping). Fusing the distance and
+the exponential in one VMEM pass avoids materializing the distance row in
+HBM — the classic producer-consumer fusion the paper's numpy code cannot
+express.
+
+Same tiling discipline as pairwise_dist.py: (1, p) x (TN, p) -> (1, TN)
+tiles, MXU cross term, VPU exp. interpret=True for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TN = 128
+
+
+def _kde_row_kernel(x_ref, b_ref, h2_ref, o_ref):
+    x = x_ref[...]       # (1, p)
+    b = b_ref[...]       # (TN, p)
+    h2 = h2_ref[0, 0]    # scalar bandwidth^2 (prefetched whole)
+    cross = jnp.dot(x, b.T, preferred_element_type=jnp.float32)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    b2 = jnp.sum(b * b, axis=1, keepdims=True)
+    d2 = jnp.maximum(x2 + b2.T - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-d2 / (2.0 * h2))
+
+
+@jax.jit
+def kde_row(x: jax.Array, b: jax.Array, h2: jax.Array) -> jax.Array:
+    """k[j] = exp(-||x-b_j||^2 / (2 h2)) ; x:(1,p), b:(n,p), h2:(1,1)."""
+    n, p = b.shape
+    return pl.pallas_call(
+        _kde_row_kernel,
+        grid=(pl.cdiv(n, TN),),
+        in_specs=[
+            pl.BlockSpec((1, p), lambda j: (0, 0)),
+            pl.BlockSpec((TN, p), lambda j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TN), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=True,
+    )(x, b, h2)
+
+
+def _kde_matrix_kernel(a_ref, b_ref, h2_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    h2 = h2_ref[0, 0]
+    cross = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+    a2 = jnp.sum(a * a, axis=1, keepdims=True)
+    b2 = jnp.sum(b * b, axis=1, keepdims=True)
+    d2 = jnp.maximum(a2 + b2.T - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-d2 / (2.0 * h2))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def kde_matrix(a: jax.Array, b: jax.Array, h2: jax.Array) -> jax.Array:
+    """K[i,j] = exp(-||a_i-b_j||^2/(2 h2)) — training-phase kernel matrix."""
+    TM = 128
+    m, p = a.shape
+    n, _ = b.shape
+    return pl.pallas_call(
+        _kde_matrix_kernel,
+        grid=(pl.cdiv(m, TM), pl.cdiv(n, TN)),
+        in_specs=[
+            pl.BlockSpec((TM, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((TN, p), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b, h2)

@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: tiled pairwise squared-Euclidean distance.
+
+The compute hot-spot of every nearest-neighbour-family nonconformity
+measure in the paper (k-NN, Simplified k-NN, KDE, k-NN regression) is
+distance evaluation:
+
+  * training phase  — the full pairwise matrix D[i,j] = ||x_i - x_j||^2
+    over the training set (O(n^2 p)), used to precompute the provisional
+    scores alpha'_i;
+  * prediction phase — one distance row d[i] = ||x - x_i||^2 per test
+    point (O(n p)), used for the O(1) incremental score updates.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): we express
+||a-b||^2 = ||a||^2 + ||b||^2 - 2 a.b so the cross term is a rank-p
+matmul that maps onto the MXU systolic array, and the norm terms are
+cheap VPU broadcasts fused in-register. The grid tiles A in (TM, p)
+blocks and B in (TN, p) blocks; with TM = TN = 128 and p padded to 32,
+per-step VMEM is
+
+    A tile 128x32 f32     16 KiB
+    B tile 128x32 f32     16 KiB
+    O tile 128x128 f32    64 KiB
+    ------------------------------
+                          96 KiB  « 16 MiB/core VMEM
+
+leaving ample room for the double-buffered HBM->VMEM pipeline Pallas
+emits for the two input streams.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so on this testbed the kernel runs through the Pallas
+interpreter and lowers to plain HLO; real-TPU performance is estimated
+analytically in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. 128 matches both the MXU systolic dimension and the lane
+# width; p (feature dim) rides along whole, padded to a multiple of 8 by
+# the caller (aot.py pads the experiments' p=30 / p=784 to 32 / 784).
+TM = 128
+TN = 128
+
+
+def _pairwise_kernel(a_ref, b_ref, o_ref):
+    """One (TM, TN) output tile of the squared-distance matrix.
+
+    a_ref: (TM, p) block of A      (VMEM)
+    b_ref: (TN, p) block of B      (VMEM)
+    o_ref: (TM, TN) output block   (VMEM)
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    # MXU: cross term. preferred_element_type keeps f32 accumulation —
+    # the paper's claim is *exact* optimization, so no bf16 here.
+    cross = jnp.dot(a, b.T, preferred_element_type=jnp.float32)
+    # VPU: row/col norms, fused broadcasts.
+    a2 = jnp.sum(a * a, axis=1, keepdims=True)  # (TM, 1)
+    b2 = jnp.sum(b * b, axis=1, keepdims=True)  # (TN, 1)
+    d = a2 + b2.T - 2.0 * cross
+    # Clamp tiny negatives from cancellation: distances are >= 0.
+    o_ref[...] = jnp.maximum(d, 0.0)
+
+
+def _grid(m: int, n: int) -> tuple[int, int]:
+    return (pl.cdiv(m, TM), pl.cdiv(n, TN))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pairwise_sq_dists(a: jax.Array, b: jax.Array) -> jax.Array:
+    """D[i, j] = ||a_i - b_j||^2 via the tiled Pallas kernel.
+
+    a: (m, p) f32, b: (n, p) f32 with m, n multiples of the tile sizes
+    (aot.py only lowers padded bucket shapes). Returns (m, n) f32.
+    """
+    m, p = a.shape
+    n, _ = b.shape
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=_grid(m, n),
+        in_specs=[
+            pl.BlockSpec((TM, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((TN, p), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _dist_row_kernel(x_ref, b_ref, o_ref):
+    """One (1, TN) tile of the test-point distance row."""
+    x = x_ref[...]  # (1, p)
+    b = b_ref[...]  # (TN, p)
+    diff_cross = jnp.dot(x, b.T, preferred_element_type=jnp.float32)  # (1, TN)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (1, 1)
+    b2 = jnp.sum(b * b, axis=1, keepdims=True)  # (TN, 1)
+    o_ref[...] = jnp.maximum(x2 + b2.T - 2.0 * diff_cross, 0.0)
+
+
+@jax.jit
+def dist_row(x: jax.Array, b: jax.Array) -> jax.Array:
+    """d[j] = ||x - b_j||^2 for a single test point.
+
+    x: (1, p) f32, b: (n, p) f32, n a multiple of TN. Returns (1, n).
+    The per-test-point hot path of the optimized predictors.
+    """
+    n, p = b.shape
+    return pl.pallas_call(
+        _dist_row_kernel,
+        grid=(pl.cdiv(n, TN),),
+        in_specs=[
+            pl.BlockSpec((1, p), lambda j: (0, 0)),
+            pl.BlockSpec((TN, p), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TN), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=True,
+    )(x, b)

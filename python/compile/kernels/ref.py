@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the ground truth that python/tests/ (hypothesis sweeps) and the
+Rust exactness tests are anchored to. No Pallas, no tiling — just the
+textbook formulas.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(a, b):
+    """D[i,j] = ||a_i - b_j||^2, direct O(m n p) broadcast."""
+    diff = a[:, None, :] - b[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def dist_row_ref(x, b):
+    """d[j] = ||x - b_j||^2 for x of shape (1, p)."""
+    diff = x - b
+    return jnp.sum(diff * diff, axis=-1)[None, :]
+
+
+def kde_row_ref(x, b, h2):
+    """k[j] = exp(-||x-b_j||^2 / (2 h2))."""
+    return jnp.exp(-dist_row_ref(x, b) / (2.0 * h2.reshape(())))
+
+
+def kde_matrix_ref(a, b, h2):
+    return jnp.exp(-pairwise_sq_dists_ref(a, b) / (2.0 * h2.reshape(())))
+
+
+def lssvm_train_ref(phis, ys, rho):
+    """Closed-form LS-SVM (App. B.1): w* = Phi [Phi^T Phi + rho I]^-1 Y,
+    C = Phi [Phi^T Phi + rho I]^-1 Phi^T.  phis: (n, q), ys: (n,)."""
+    n = phis.shape[0]
+    g = phis @ phis.T + rho * jnp.eye(n)
+    ginv = jnp.linalg.inv(g)
+    w = phis.T @ (ginv @ ys)
+    c = phis.T @ ginv @ phis
+    return w, c
+
+
+def lssvm_update_ref(w, C, phi, y, rho, sign):
+    """Lee et al. (2019) inc(+1)/dec(-1) update, dense formulas."""
+    w = w.reshape(-1)
+    phi = phi.reshape(-1)
+    y = jnp.asarray(y).reshape(())
+    rho = jnp.asarray(rho).reshape(())
+    sign = jnp.asarray(sign).reshape(())
+    q = w.shape[0]
+    u = C @ phi - phi  # (C - I) phi
+    denom = sign * (phi @ phi) + rho - sign * (phi @ C @ phi)
+    w_new = w + sign * u * ((phi @ w - y) / denom)
+    c_new = C + sign * jnp.outer(u, u) / denom
+    return w_new.reshape(q, 1), c_new
+
+
+def knn_score_update_ref(alpha_prov, delta_k, d_row, same_label):
+    """Paper §3.1: alpha_i = alpha'_i - Delta_i^k + d(x_i, x) when the
+    test point enters x_i's same-label k-NN set, else alpha'_i.
+
+    alpha_prov, delta_k, d_row: (n,) f32; same_label: (n,) bool/f32 mask.
+    """
+    take = (d_row < delta_k) & (same_label > 0.5)
+    return jnp.where(take, alpha_prov - delta_k + d_row, alpha_prov)

@@ -1,0 +1,118 @@
+"""L2: JAX compute graphs for the CP hot paths, composed from L1 kernels.
+
+Each public function here is an AOT entry point: `aot.py` jit-lowers it at
+a fixed shape bucket to HLO text, and the Rust runtime
+(`rust/src/runtime/`) loads + executes the artifact on the PJRT CPU
+client at serving time. Python never runs on the request path.
+
+Entry points (all f32; n, p are padded bucket shapes):
+
+  pairwise      (n,p),(n,p)                    -> (n,n)   sq. distances
+  dist_row      (1,p),(n,p)                    -> (1,n)   test-point row
+  kde_row       (1,p),(n,p),(1,1)              -> (1,n)   Gaussian row
+  knn_update    (1,p),(n,p),(n,),(n,),(n,)     -> (1,n)   fused §3.1 update
+  lssvm_update  (q,1),(q,q),(q,1),3x(1,1)      -> (q,1),(q,q)
+
+`knn_update` is the flagship fusion: one pass computes the distance row
+(Pallas), takes sqrt (the paper's measures operate on the metric d, our
+kernels on d^2), and applies the paper's O(1)-per-point provisional-score
+update — so a whole CP p-value's score vector is one PJRT call.
+
+Padding contract (runtime enforces, tests verify): phantom training rows
+carry `same_label = 0`, so the `knn_update` where-branch never fires for
+them and phantom scores pass through; distance rows for phantom entries
+are garbage and must be masked Rust-side before any k-selection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.pairwise_dist import pairwise_sq_dists, dist_row
+from compile.kernels.kde_row import kde_row as _kde_row, kde_matrix
+from compile.kernels.lssvm_update import lssvm_update as _lssvm_update
+
+
+def pairwise(a, b):
+    """Training-phase pairwise squared-distance matrix (tuple-wrapped)."""
+    return (pairwise_sq_dists(a, b),)
+
+
+def dist_row_fn(x, b):
+    """Prediction-phase distance row for one test point."""
+    return (dist_row(x, b),)
+
+
+def kde_row_fn(x, b, h2):
+    """Prediction-phase Gaussian kernel row (unnormalized)."""
+    return (_kde_row(x, b, h2),)
+
+
+def kde_matrix_fn(a, b, h2):
+    """Training-phase Gaussian kernel matrix."""
+    return (kde_matrix(a, b, h2),)
+
+
+def knn_update(x, train, alpha_prov, delta_k, same_label):
+    """Fused Simplified-k-NN score update (paper §3.1) for one test point.
+
+    x:          (1, p)  test object
+    train:      (n, p)  training objects (padded; phantoms arbitrary)
+    alpha_prov: (n,)    provisional scores alpha'_i (sum of k best dists)
+    delta_k:    (n,)    k-th best same-label distance per training point
+    same_label: (n,)    1.0 where y_i == y-candidate, else 0.0
+
+    Returns (1, n): the exact LOO scores alpha_i for the augmented bag
+    {(x, y)} u Z \\ {(x_i, y_i)}.
+    """
+    d2 = dist_row(x, train)          # (1, n) squared distances (Pallas)
+    d = jnp.sqrt(d2)[0]              # the measures use the metric itself
+    take = (d < delta_k) & (same_label > 0.5)
+    alpha = jnp.where(take, alpha_prov - delta_k + d, alpha_prov)
+    return (alpha[None, :],)
+
+
+def lssvm_update_fn(w, c, phi, y, rho, sign):
+    """Exact LS-SVM inc(+1)/dec(-1) update (Lee et al. 2019)."""
+    return _lssvm_update(w, c, phi, y, rho, sign)
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets lowered by aot.py. Row counts are multiples of the 128
+# tile; p covers the paper's two workloads (30-dim synthetic -> 32,
+# 784-dim MNIST-like); q covers linear (32) and RFF (256) feature maps.
+# ---------------------------------------------------------------------------
+
+ROW_BUCKETS = (256, 1024, 4096, 16384)
+P_BUCKETS = (32, 784)
+Q_BUCKETS = (32, 256)
+
+
+def entry_points():
+    """(name, fn, example_args) for every artifact aot.py must emit."""
+    f32 = jnp.float32
+    out = []
+    for p in P_BUCKETS:
+        for n in ROW_BUCKETS:
+            xn = jax.ShapeDtypeStruct((1, p), f32)
+            bn = jax.ShapeDtypeStruct((n, p), f32)
+            vn = jax.ShapeDtypeStruct((n,), f32)
+            s = jax.ShapeDtypeStruct((1, 1), f32)
+            out.append((f"dist_row_n{n}_p{p}", dist_row_fn, (xn, bn)))
+            out.append((f"kde_row_n{n}_p{p}", kde_row_fn, (xn, bn, s)))
+            out.append(
+                (f"knn_update_n{n}_p{p}", knn_update, (xn, bn, vn, vn, vn)))
+        # Pairwise matrices only for buckets that fit memory comfortably.
+        for n in (256, 1024, 4096):
+            an = jax.ShapeDtypeStruct((n, p), f32)
+            s = jax.ShapeDtypeStruct((1, 1), f32)
+            out.append((f"pairwise_n{n}_p{p}", pairwise, (an, an)))
+            out.append((f"kde_matrix_n{n}_p{p}", kde_matrix_fn, (an, an, s)))
+    for q in Q_BUCKETS:
+        wq = jax.ShapeDtypeStruct((q, 1), f32)
+        cq = jax.ShapeDtypeStruct((q, q), f32)
+        s = jax.ShapeDtypeStruct((1, 1), f32)
+        out.append((f"lssvm_update_q{q}", lssvm_update_fn,
+                    (wq, cq, wq, s, s, s)))
+    return out

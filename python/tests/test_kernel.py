@@ -1,0 +1,216 @@
+# pytest: Pallas kernels vs pure-jnp ref — the CORE L1 correctness signal.
+#
+# hypothesis sweeps shapes/values; fixed-seed cases pin the exact tile
+# boundary shapes the AOT buckets use.
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.pairwise_dist import pairwise_sq_dists, dist_row, TM, TN
+from compile.kernels.kde_row import kde_row, kde_matrix
+from compile.kernels.lssvm_update import lssvm_update
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand(shape, seed, scale=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- pairwise
+
+@pytest.mark.parametrize("m,n,p", [
+    (TM, TN, 32),          # single tile
+    (2 * TM, 3 * TN, 32),  # multi-tile grid
+    (TM, TN, 784),         # MNIST-like feature dim
+])
+def test_pairwise_matches_ref(m, n, p):
+    a, b = rand((m, p), 1), rand((n, p), 2)
+    got = pairwise_sq_dists(jnp.asarray(a), jnp.asarray(b))
+    want = ref.pairwise_sq_dists_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_pairwise_self_diagonal_zero():
+    a = rand((TM, 32), 3)
+    d = np.asarray(pairwise_sq_dists(jnp.asarray(a), jnp.asarray(a)))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-4)
+    assert (d >= 0).all(), "squared distances must be non-negative"
+
+
+def test_pairwise_symmetry():
+    a = rand((TM, 32), 4)
+    d = np.asarray(pairwise_sq_dists(jnp.asarray(a), jnp.asarray(a)))
+    np.testing.assert_allclose(d, d.T, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale=st.sampled_from([1e-2, 1.0, 1e2]))
+def test_pairwise_hypothesis(seed, scale):
+    a, b = rand((TM, 32), seed, scale), rand((TN, 32), seed + 1, scale)
+    got = pairwise_sq_dists(jnp.asarray(a), jnp.asarray(b))
+    want = ref.pairwise_sq_dists_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale ** 2)
+
+
+# ---------------------------------------------------------------- dist_row
+
+@pytest.mark.parametrize("n,p", [(TN, 32), (4 * TN, 32), (TN, 784)])
+def test_dist_row_matches_ref(n, p):
+    x, b = rand((1, p), 5), rand((n, p), 6)
+    got = dist_row(jnp.asarray(x), jnp.asarray(b))
+    want = ref.dist_row_ref(jnp.asarray(x), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_dist_row_agrees_with_pairwise():
+    x, b = rand((1, 32), 7), rand((2 * TN, 32), 8)
+    row = np.asarray(dist_row(jnp.asarray(x), jnp.asarray(b)))
+    # Embed x as the first row of a padded A block.
+    a = np.zeros((TM, 32), np.float32)
+    a[0] = x[0]
+    mat = np.asarray(pairwise_sq_dists(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(row[0], mat[0], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- kde
+
+@pytest.mark.parametrize("n,p,h2", [(TN, 32, 1.0), (2 * TN, 32, 0.5),
+                                    (TN, 784, 4.0)])
+def test_kde_row_matches_ref(n, p, h2):
+    x, b = rand((1, p), 9), rand((n, p), 10)
+    h = jnp.full((1, 1), h2, jnp.float32)
+    got = kde_row(jnp.asarray(x), jnp.asarray(b), h)
+    want = ref.kde_row_ref(jnp.asarray(x), jnp.asarray(b), h)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_kde_matrix_matches_ref():
+    a, b = rand((TM, 32), 11), rand((2 * TN, 32), 12)
+    h = jnp.full((1, 1), 2.0, jnp.float32)
+    got = kde_matrix(jnp.asarray(a), jnp.asarray(b), h)
+    want = ref.kde_matrix_ref(jnp.asarray(a), jnp.asarray(b), h)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_kde_row_bounds():
+    x, b = rand((1, 32), 13), rand((TN, 32), 14)
+    h = jnp.full((1, 1), 1.0, jnp.float32)
+    k = np.asarray(kde_row(jnp.asarray(x), jnp.asarray(b), h))
+    assert (k >= 0).all() and (k <= 1.0 + 1e-6).all()
+
+
+# ---------------------------------------------------------------- lssvm
+
+def _mk_state(q, n, seed, rho=1.0):
+    phis = rand((n, q), seed, 0.5)
+    ys = np.sign(rand((n,), seed + 1)) .astype(np.float32)
+    w, c = ref.lssvm_train_ref(jnp.asarray(phis), jnp.asarray(ys), rho)
+    return phis, ys, np.asarray(w).reshape(q, 1), np.asarray(c)
+
+
+@pytest.mark.parametrize("q", [32, 256])
+@pytest.mark.parametrize("sign", [1.0, -1.0])
+def test_lssvm_update_matches_ref(q, sign):
+    phis, ys, w, c = _mk_state(q, 40, 20)
+    phi = phis[3].reshape(q, 1) if sign < 0 else rand((q, 1), 21, 0.5)
+    y = np.float32(1.0)
+    s = lambda v: jnp.full((1, 1), v, jnp.float32)
+    got_w, got_c = lssvm_update(
+        jnp.asarray(w), jnp.asarray(c), jnp.asarray(phi), s(y), s(1.0), s(sign))
+    want_w, want_c = ref.lssvm_update_ref(
+        jnp.asarray(w), jnp.asarray(c), jnp.asarray(phi), y, 1.0, sign)
+    # f32 state with near-singular C at q >> n: compare against the same
+    # f32 ref formula with a mixed rel/abs tolerance.
+    np.testing.assert_allclose(got_w, want_w, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-3, atol=1e-4)
+
+
+def test_lssvm_increment_equals_retrain():
+    """Exactness of Lee et al.: inc-add == closed-form retrain (f64 ref)."""
+    q, n, rho = 8, 30, 1.0
+    rng = np.random.default_rng(33)
+    phis = rng.standard_normal((n, q))
+    ys = np.sign(rng.standard_normal(n))
+    # numpy f64 closed forms (the jnp ref runs in f32; numpy is the oracle)
+    def train(ph, yy):
+        g = ph @ ph.T + rho * np.eye(len(yy))
+        gi = np.linalg.inv(g)
+        return ph.T @ (gi @ yy), ph.T @ gi @ ph
+    w0, c0 = train(phis[:-1], ys[:-1])
+    w_inc, c_inc = ref.lssvm_update_ref(
+        jnp.asarray(w0.reshape(q, 1)), jnp.asarray(c0),
+        jnp.asarray(phis[-1].reshape(q, 1)), ys[-1], rho, 1.0)
+    w_full, c_full = train(phis, ys)
+    np.testing.assert_allclose(np.asarray(w_inc).ravel(), w_full,
+                               rtol=1e-5, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(c_inc), c_full,
+                               rtol=1e-5, atol=1e-8)
+
+
+def test_lssvm_add_then_remove_roundtrip():
+    q = 32
+    phis, ys, w, c = _mk_state(q, 50, 22)
+    phi = rand((q, 1), 23, 0.5)
+    s = lambda v: jnp.full((1, 1), v, jnp.float32)
+    w1, c1 = lssvm_update(jnp.asarray(w), jnp.asarray(c), jnp.asarray(phi),
+                          s(-1.0), s(1.0), s(1.0))
+    w2, c2 = lssvm_update(w1, c1, jnp.asarray(phi), s(-1.0), s(1.0), s(-1.0))
+    np.testing.assert_allclose(w2, w, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(c2, c, rtol=1e-3, atol=1e-4)
+
+
+# ------------------------------------------------------ fused knn_update
+
+def test_knn_update_graph_matches_ref():
+    from compile.model import knn_update
+    n, p, k = 2 * TN, 32, 5
+    rng = np.random.default_rng(55)
+    train = rng.standard_normal((n, p)).astype(np.float32)
+    x = rng.standard_normal((1, p)).astype(np.float32)
+    labels = rng.integers(0, 2, n)
+    same = (labels == 1).astype(np.float32)
+    # provisional scores: true k-NN same-label sums from numpy
+    d = np.sqrt(((train[:, None, :] - train[None, :, :]) ** 2).sum(-1))
+    np.fill_diagonal(d, np.inf)
+    alpha_prov = np.zeros(n, np.float32)
+    delta_k = np.zeros(n, np.float32)
+    for i in range(n):
+        mask = labels == labels[i]
+        mask[i] = False
+        ds = np.sort(d[i, mask])[:k]
+        alpha_prov[i] = ds.sum()
+        delta_k[i] = ds[-1]
+    (got,) = knn_update(jnp.asarray(x), jnp.asarray(train),
+                        jnp.asarray(alpha_prov), jnp.asarray(delta_k),
+                        jnp.asarray(same))
+    drow = np.sqrt(((x - train) ** 2).sum(-1))
+    want = ref.knn_score_update_ref(
+        jnp.asarray(alpha_prov), jnp.asarray(delta_k),
+        jnp.asarray(drow.astype(np.float32)), jnp.asarray(same))
+    np.testing.assert_allclose(np.asarray(got)[0], np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_knn_update_phantom_rows_pass_through(seed):
+    """Padding contract: rows with same_label=0 keep alpha' untouched."""
+    from compile.model import knn_update
+    n, p = TN, 32
+    rng = np.random.default_rng(seed)
+    train = rng.standard_normal((n, p)).astype(np.float32)
+    x = rng.standard_normal((1, p)).astype(np.float32)
+    alpha_prov = rng.random(n).astype(np.float32)
+    delta_k = np.full(n, 1e9, np.float32)   # everything would update...
+    same = np.zeros(n, np.float32)          # ...but mask forbids it
+    (got,) = knn_update(jnp.asarray(x), jnp.asarray(train),
+                        jnp.asarray(alpha_prov), jnp.asarray(delta_k),
+                        jnp.asarray(same))
+    np.testing.assert_array_equal(np.asarray(got)[0], alpha_prov)

@@ -1,0 +1,103 @@
+//! Bench: Figure 2 — per-prediction latency of standard vs optimized
+//! full CP vs ICP at a fixed, meaningful n (end-to-end p-value
+//! computation for one test point, both labels).
+//!
+//! Run: `cargo bench --bench fig2_predict` (pass `--quick` via
+//! BENCH_QUICK=1 for a fast sanity pass).
+
+use std::time::Duration;
+
+use exact_cp::bench_harness::timing::microbench;
+use exact_cp::config::{MeasureConfig, MeasureKind};
+use exact_cp::coordinator::factory::{build_measure, build_standard_measure};
+use exact_cp::cp::icp::Icp;
+use exact_cp::cp::pvalue::p_value;
+use exact_cp::data::{make_classification, ClassificationSpec};
+use exact_cp::measures::{FeatureMap, IcpKde, IcpKnn, IcpLsSvm};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let budget = Duration::from_millis(if quick { 200 } else { 1500 });
+    let n = if quick { 256 } else { 2048 };
+    let cfg = MeasureConfig::default();
+
+    let ds = make_classification(
+        &ClassificationSpec {
+            n_samples: n,
+            ..Default::default()
+        },
+        1,
+    );
+    let probe = make_classification(
+        &ClassificationSpec {
+            n_samples: 4,
+            ..Default::default()
+        },
+        2,
+    );
+    let x = probe.row(0);
+
+    println!("== fig2 bench: one CP prediction (both labels) at n={n} ==");
+
+    // optimized measures (the paper's contribution)
+    for kind in [
+        MeasureKind::SimplifiedKnn,
+        MeasureKind::Knn,
+        MeasureKind::Kde,
+        MeasureKind::LsSvm,
+    ] {
+        let mut m = build_measure(kind, &cfg, None);
+        m.fit(&ds);
+        microbench(
+            &format!("optimized/{}", kind.as_str()),
+            budget,
+            || {
+                let mut acc = 0.0;
+                for y in 0..2 {
+                    acc += p_value(&m.scores(x, y));
+                }
+                acc
+            },
+        );
+    }
+
+    // standard baselines at a reduced n (they are the slow side)
+    let n_std = (n / 8).max(64);
+    let ds_std = make_classification(
+        &ClassificationSpec {
+            n_samples: n_std,
+            ..Default::default()
+        },
+        3,
+    );
+    for kind in [MeasureKind::SimplifiedKnn, MeasureKind::Kde] {
+        let mut m = build_standard_measure(kind, &cfg);
+        m.fit(&ds_std);
+        microbench(
+            &format!("standard/{} (n={n_std})", kind.as_str()),
+            budget,
+            || {
+                let mut acc = 0.0;
+                for y in 0..2 {
+                    acc += p_value(&m.scores(x, y));
+                }
+                acc
+            },
+        );
+    }
+
+    // ICP baselines
+    let icp_knn = Icp::calibrate(IcpKnn::new(cfg.k, true), &ds, n / 2);
+    microbench("icp/simplified-knn", budget, || {
+        icp_knn.p_values(x).iter().sum::<f64>()
+    });
+    let icp_kde = Icp::calibrate(IcpKde::new(cfg.h), &ds, n / 2);
+    microbench("icp/kde", budget, || {
+        icp_kde.p_values(x).iter().sum::<f64>()
+    });
+    let icp_svm =
+        Icp::calibrate(IcpLsSvm::new(cfg.rho, FeatureMap::Linear), &ds, n / 2);
+    microbench("icp/lssvm", budget, || {
+        icp_svm.p_values(x).iter().sum::<f64>()
+    });
+}

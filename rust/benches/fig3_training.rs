@@ -1,0 +1,31 @@
+//! Bench: Figure 3 — training (precomputation) time of the optimized
+//! measures at a fixed n.
+
+use std::time::Duration;
+
+use exact_cp::bench_harness::timing::microbench;
+use exact_cp::config::{MeasureConfig, MeasureKind};
+use exact_cp::coordinator::factory::build_measure;
+use exact_cp::data::{make_classification, ClassificationSpec};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let budget = Duration::from_millis(if quick { 200 } else { 1500 });
+    let n = if quick { 256 } else { 1024 };
+    let cfg = MeasureConfig::default();
+    let ds = make_classification(
+        &ClassificationSpec {
+            n_samples: n,
+            ..Default::default()
+        },
+        1,
+    );
+    println!("== fig3 bench: optimized-measure training at n={n} ==");
+    for kind in MeasureKind::all() {
+        microbench(&format!("train/{}", kind.as_str()), budget, || {
+            let mut m = build_measure(kind, &cfg, None);
+            m.fit(&ds);
+            m.n()
+        });
+    }
+}

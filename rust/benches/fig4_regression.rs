@@ -1,0 +1,58 @@
+//! Bench: Figure 4 — k-NN CP regression prediction latency:
+//! Papadopoulos-2011 vs our optimization vs ICP.
+
+use std::time::Duration;
+
+use exact_cp::bench_harness::timing::microbench;
+use exact_cp::data::{make_regression, RegressionSpec};
+use exact_cp::regression::{
+    IcpKnnRegressor, KnnRegressorOptimized, KnnRegressorStandard,
+};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let budget = Duration::from_millis(if quick { 200 } else { 1500 });
+    let n = if quick { 256 } else { 2048 };
+    let k = 15;
+    let spec = RegressionSpec {
+        n_samples: n,
+        n_features: 30,
+        n_informative: 10,
+        noise: 10.0,
+    };
+    let ds = make_regression(&spec, 1);
+    let probe = make_regression(
+        &RegressionSpec {
+            n_samples: 2,
+            ..spec
+        },
+        2,
+    );
+    let x = probe.row(0);
+    println!("== fig4 bench: one regression region at n={n}, k={k} ==");
+
+    let mut opt = KnnRegressorOptimized::new(k);
+    opt.fit(&ds);
+    microbench("optimized (ours)", budget, || {
+        opt.predict_region(x, 0.1).intervals.len()
+    });
+
+    // Papadopoulos-2011 at reduced n (the O(n^2) side)
+    let n_std = (n / 8).max(64);
+    let ds_std = make_regression(
+        &RegressionSpec {
+            n_samples: n_std,
+            ..spec
+        },
+        3,
+    );
+    let mut std_m = KnnRegressorStandard::new(k);
+    std_m.fit(&ds_std);
+    microbench(&format!("papadopoulos2011 (n={n_std})"), budget, || {
+        std_m.predict_region(x, 0.1).intervals.len()
+    });
+
+    let mut icp = IcpKnnRegressor::new(k);
+    icp.fit(&ds, n / 2);
+    microbench("icp", budget, || icp.predict_interval(x, 0.1).0);
+}

@@ -1,0 +1,109 @@
+//! Bench: micro-level hot paths — the §Perf optimization targets.
+//!
+//! * distance row (native vs PJRT/Pallas)
+//! * KBest insert + sum_with (the O(1) update of §3.1)
+//! * LS-SVM virtual decrement (w_without)
+//! * p-value counting
+//! * full optimized score vector (one scores() call)
+
+use std::time::Duration;
+
+use exact_cp::bench_harness::timing::microbench;
+use exact_cp::cp::measure::{CpMeasure, Scores};
+use exact_cp::cp::pvalue::p_value;
+use exact_cp::data::{make_classification, ClassificationSpec, Rng};
+use exact_cp::linalg::engine::{DistEngine, NativeEngine};
+use exact_cp::linalg::select::KBest;
+use exact_cp::measures::knn::KnnOptimized;
+use exact_cp::measures::lssvm::{FeatureMap, LsSvmModel};
+use exact_cp::measures::LsSvmOptimized;
+use exact_cp::runtime::PjrtRuntime;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let budget = Duration::from_millis(if quick { 150 } else { 1000 });
+    let n = 2048usize;
+    let p = 30usize;
+    let mut rng = Rng::seed_from(1);
+    let rows: Vec<f64> = (0..n * p).map(|_| rng.normal()).collect();
+    let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+    let mut out = vec![0.0; n];
+
+    println!("== hot-path micro benches (n={n}, p={p}) ==");
+
+    microbench("dist_row native", budget, || {
+        NativeEngine.dist_row_sq(&x, &rows, p, &mut out);
+        out[0]
+    });
+
+    if let Ok(rt) = PjrtRuntime::open("artifacts") {
+        // warm the executable cache outside the timed region
+        let _ = rt.dist_row_sq_f32(&x, &rows, p);
+        microbench("dist_row pjrt/pallas", budget, || {
+            rt.dist_row_sq_f32(&x, &rows, p).unwrap()[0]
+        });
+        let alpha = vec![1.0; n];
+        let delta = vec![0.5; n];
+        let same = vec![1.0; n];
+        let _ = rt.knn_update_f32(&x, &rows, p, &alpha, &delta, &same);
+        microbench("knn_update fused pjrt", budget, || {
+            rt.knn_update_f32(&x, &rows, p, &alpha, &delta, &same)
+                .unwrap()[0]
+        });
+    } else {
+        println!("(artifacts missing — skipping PJRT rows)");
+    }
+
+    // KBest update path
+    let mut kb = KBest::new(15);
+    for _ in 0..200 {
+        kb.insert(rng.f64());
+    }
+    microbench("kbest sum_with (O(1) update)", budget, || {
+        kb.sum_with(0.3)
+    });
+
+    // p-value counting over a big score vector
+    let scores = Scores {
+        train: (0..n).map(|_| rng.f64()).collect(),
+        test: 0.5,
+    };
+    microbench("p_value count (n=2048)", budget, || p_value(&scores));
+
+    // LS-SVM virtual decrement
+    let q = 30;
+    let phis: Vec<f64> = (0..64 * q).map(|_| rng.normal()).collect();
+    let phi_mat = exact_cp::linalg::Mat {
+        data: phis,
+        rows: 64,
+        cols: q,
+    };
+    let ys: Vec<f64> = (0..64)
+        .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+        .collect();
+    let model = LsSvmModel::train(&phi_mat, &ys, 1.0);
+    let mut w_buf = Vec::with_capacity(q);
+    microbench("lssvm w_without (O(q^2))", budget, || {
+        model.w_without(phi_mat.row(3), ys[3], &mut w_buf);
+        w_buf[0]
+    });
+
+    // end-to-end optimized scores() calls
+    let ds = make_classification(
+        &ClassificationSpec {
+            n_samples: n,
+            ..Default::default()
+        },
+        5,
+    );
+    let mut knn = KnnOptimized::new(15, true);
+    knn.fit(&ds);
+    microbench("scores(): simplified-knn opt n=2048", budget, || {
+        knn.scores(&x, 0).test
+    });
+    let mut svm = LsSvmOptimized::new(1.0, FeatureMap::Linear);
+    svm.fit(&ds);
+    microbench("scores(): lssvm opt n=2048", budget, || {
+        svm.scores(&x, 0).test
+    });
+}

@@ -1,0 +1,44 @@
+//! Bench: App. C.5 — one step of the online IID test (p-value for a new
+//! observation + incremental learn) at a fixed history size.
+
+use std::time::Duration;
+
+use exact_cp::bench_harness::timing::microbench;
+use exact_cp::cp::measure::CpMeasure;
+use exact_cp::cp::pvalue::smoothed_p_value;
+use exact_cp::data::{Dataset, Rng};
+use exact_cp::measures::knn::{KnnOptimized, KnnStandard};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let budget = Duration::from_millis(if quick { 200 } else { 1500 });
+    let n = if quick { 256 } else { 2000 };
+    let dim = 5;
+    let mut rng = Rng::seed_from(1);
+    let xs: Vec<f64> = (0..n * dim).map(|_| rng.normal()).collect();
+    let history = Dataset::new(xs, vec![0; n], dim, 1);
+    let x_new: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+
+    println!("== iid bench: one online-test step with history n={n} ==");
+
+    let mut opt = KnnOptimized::new(5, true);
+    opt.fit(&history);
+    microbench("optimized: p-value (O(n))", budget, || {
+        smoothed_p_value(&opt.scores(&x_new, 0), 0.5)
+    });
+
+    let n_std = (n / 8).max(64);
+    let small = Dataset::new(
+        history.x[..n_std * dim].to_vec(),
+        vec![0; n_std],
+        dim,
+        1,
+    );
+    let mut std_m = KnnStandard::new(5, true);
+    std_m.fit(&small);
+    microbench(
+        &format!("standard: p-value (O(n^2), n={n_std})"),
+        budget,
+        || smoothed_p_value(&std_m.scores(&x_new, 0), 0.5),
+    );
+}

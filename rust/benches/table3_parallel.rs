@@ -1,0 +1,50 @@
+//! Bench: Table 3 (App. H) — sequential vs thread-pool-parallel CP over
+//! a test batch, optimized Simplified k-NN.
+
+use std::time::Duration;
+
+use exact_cp::bench_harness::timing::{microbench, parallel_map};
+use exact_cp::config::{MeasureConfig, MeasureKind};
+use exact_cp::coordinator::factory::build_measure;
+use exact_cp::cp::pvalue::p_value;
+use exact_cp::data::{make_classification, ClassificationSpec};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let budget = Duration::from_millis(if quick { 200 } else { 1500 });
+    let n = if quick { 256 } else { 1000 };
+    let n_test = 16;
+    let cfg = MeasureConfig::default();
+    let all = make_classification(
+        &ClassificationSpec {
+            n_samples: n + n_test,
+            ..Default::default()
+        },
+        1,
+    );
+    let mut rng = exact_cp::data::Rng::seed_from(2);
+    let (train, test) = all.split(n, &mut rng);
+    let mut m = build_measure(MeasureKind::SimplifiedKnn, &cfg, None);
+    m.fit(&train);
+    let m = &m;
+    println!(
+        "== table3 bench: batch of {n_test} predictions at n={n} \
+         (cores available: {}) ==",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    );
+    let work = |i: usize| {
+        let mut acc = 0.0;
+        for y in 0..2 {
+            acc += p_value(&m.scores(test.row(i), y));
+        }
+        acc
+    };
+    microbench("sequential", budget, || {
+        (0..n_test).map(work).sum::<f64>()
+    });
+    for threads in [2usize, 4, 8] {
+        microbench(&format!("parallel x{threads}"), budget, || {
+            parallel_map(n_test, threads, work).into_iter().sum::<f64>()
+        });
+    }
+}

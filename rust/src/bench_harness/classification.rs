@@ -1,0 +1,450 @@
+//! Figure 2 / Figure 3 / Figure 6 / Table 1 drivers: prediction and
+//! training time of standard vs optimized full CP vs ICP on the paper's
+//! §7 workload (`make_classification`, binary, p = 30).
+//!
+//! The paper runs n up to 1e5 with a 10 h timeout on a Xeon; the default
+//! grid here is scaled for a 1-core minutes-budget testbed (DESIGN.md
+//! §4); `--paper-scale` restores the paper grid. What must reproduce is
+//! the *shape*: standard CP grows ~1 power of n faster than optimized
+//! CP, ICP is fastest, and optimized CP is within practical reach of ICP
+//! — which the `table1` slope validation checks quantitatively.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bench_harness::report::{fmt_secs, Report};
+use crate::bench_harness::timing::{loglog_slope, time_once, time_sweep};
+use crate::config::{Config, MeasureKind};
+use crate::coordinator::factory::{build_measure, build_standard_measure};
+use crate::cp::icp::{Icp, IcpMeasure};
+use crate::cp::measure::CpMeasure;
+use crate::cp::pvalue::p_value;
+use crate::data::{make_classification, ClassificationSpec, Dataset, Rng};
+use crate::measures::{
+    BootstrapParams, FeatureMap, IcpKde, IcpKnn, IcpLsSvm, IcpRandomForest,
+};
+
+/// Measure-variant axis of Figures 2/3/6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Standard,
+    Optimized,
+    Icp,
+}
+
+impl Variant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Standard => "standard",
+            Variant::Optimized => "optimized",
+            Variant::Icp => "icp",
+        }
+    }
+}
+
+/// Default scaled log-grid (13 values over [10, 10^5] in the paper;
+/// here over [10, ~4.6k] — same spacing, truncated).
+pub fn default_grid(paper_scale: bool) -> Vec<usize> {
+    let top = if paper_scale { 5.0 } else { 3.6666 };
+    let k = if paper_scale { 13 } else { 9 };
+    (0..k)
+        .map(|i| {
+            let e = 1.0 + (top - 1.0) * i as f64 / (k - 1) as f64;
+            10f64.powf(e) as usize
+        })
+        .collect()
+}
+
+fn dataset(n: usize, seed: u64) -> Dataset {
+    make_classification(
+        &ClassificationSpec {
+            n_samples: n,
+            n_features: 30,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+/// Build the ICP measure for a kind.
+fn build_icp(kind: MeasureKind, cfg: &Config) -> Box<dyn IcpMeasure> {
+    let m = &cfg.measure;
+    match kind {
+        MeasureKind::Knn => Box::new(IcpKnn::new(m.k, false)),
+        MeasureKind::SimplifiedKnn => Box::new(IcpKnn::new(m.k, true)),
+        MeasureKind::Kde => Box::new(IcpKde::new(m.h)),
+        MeasureKind::LsSvm => Box::new(IcpLsSvm::new(m.rho, FeatureMap::Linear)),
+        MeasureKind::RandomForest => Box::new(IcpRandomForest::new(
+            BootstrapParams {
+                b: m.b,
+                ..Default::default()
+            },
+        )),
+    }
+}
+
+/// One timed cell: returns (train_s, avg_predict_s, completed, timed_out).
+pub fn run_cell(
+    kind: MeasureKind,
+    variant: Variant,
+    ds: &Dataset,
+    probe: &Dataset,
+    cfg: &Config,
+    timeout: Duration,
+) -> (f64, Option<f64>, usize, bool) {
+    // k must be compatible with class sizes on tiny n; the measures
+    // handle underfull neighbourhoods, so no clamping is needed.
+    match variant {
+        Variant::Icp => {
+            let t = ds.n() / 2;
+            let measure = build_icp(kind, cfg);
+            let (icp, train_s) =
+                time_once(|| Icp::calibrate(BoxedIcp(measure), ds, t.max(1)));
+            let sweep = time_sweep(probe.n(), timeout, |i| {
+                let _ = icp.p_values(probe.row(i));
+            });
+            (train_s, sweep.avg(), sweep.completed(), sweep.timed_out)
+        }
+        Variant::Standard | Variant::Optimized => {
+            let mut measure: Box<dyn CpMeasure> = if variant == Variant::Optimized
+            {
+                build_measure(kind, &cfg.measure, None)
+            } else {
+                build_standard_measure(kind, &cfg.measure)
+            };
+            let (_, train_s) = time_once(|| measure.fit(ds));
+            let sweep = time_sweep(probe.n(), timeout, |i| {
+                for y in 0..ds.n_labels {
+                    let _ = p_value(&measure.scores(probe.row(i), y));
+                }
+            });
+            (train_s, sweep.avg(), sweep.completed(), sweep.timed_out)
+        }
+    }
+}
+
+/// Adapter: Box<dyn IcpMeasure> itself implements IcpMeasure.
+struct BoxedIcp(Box<dyn IcpMeasure>);
+impl IcpMeasure for BoxedIcp {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    fn fit(&mut self, proper: &Dataset) {
+        self.0.fit(proper)
+    }
+    fn score(&self, x: &[f64], y: usize) -> f64 {
+        self.0.score(x, y)
+    }
+}
+
+/// Which measures a figure covers.
+fn figure_measures(id: &str) -> Vec<MeasureKind> {
+    match id {
+        // Figure 2 main panel: k-NN, KDE, LS-SVM, Random Forest
+        "fig2" => vec![
+            MeasureKind::Knn,
+            MeasureKind::Kde,
+            MeasureKind::LsSvm,
+            MeasureKind::RandomForest,
+        ],
+        // Figure 6 (App. F): k-NN vs Simplified k-NN
+        "fig6" => vec![MeasureKind::Knn, MeasureKind::SimplifiedKnn],
+        // Figure 3: training time of the optimized measures
+        "fig3" => vec![
+            MeasureKind::Knn,
+            MeasureKind::SimplifiedKnn,
+            MeasureKind::Kde,
+            MeasureKind::LsSvm,
+            MeasureKind::RandomForest,
+        ],
+        _ => MeasureKind::all().to_vec(),
+    }
+}
+
+/// The Figure 2 / 6 driver (prediction time) — also records training
+/// time, which the Figure 3 driver reuses.
+pub fn run_prediction_figure(id: &str, cfg: &Config) -> Result<Report> {
+    let exp = &cfg.experiment;
+    let sizes = if exp.train_sizes.is_empty() {
+        default_grid(exp.paper_scale)
+    } else {
+        exp.train_sizes.clone()
+    };
+    let timeout = Duration::from_secs_f64(exp.timeout_s);
+    let mut report = Report::new(
+        id,
+        "prediction time per test point: standard vs optimized full CP vs ICP",
+        &[
+            "measure", "variant", "n", "seed", "train_s", "avg_predict_s",
+            "completed", "timed_out",
+        ],
+    );
+    // Once a (measure, variant) times out at some n, skip larger n for
+    // that series — the paper's curves stop at the timeout line too.
+    let mut dead: std::collections::HashSet<(MeasureKind, Variant)> =
+        std::collections::HashSet::new();
+    for &n in &sizes {
+        if n < 4 {
+            continue;
+        }
+        for seed in 0..exp.seeds {
+            let ds = dataset(n, 1000 + seed);
+            let mut rng = Rng::seed_from(2000 + seed);
+            let probe = {
+                // exchangeable probe: fresh draw from the same generator
+                let extra = dataset(exp.n_test.max(1), 3000 + seed);
+                let _ = &mut rng;
+                extra
+            };
+            for kind in figure_measures(id) {
+                for variant in
+                    [Variant::Standard, Variant::Optimized, Variant::Icp]
+                {
+                    if dead.contains(&(kind, variant)) {
+                        continue;
+                    }
+                    let (train_s, avg, done, timed_out) =
+                        run_cell(kind, variant, &ds, &probe, cfg, timeout);
+                    report.push_row(vec![
+                        kind.as_str().into(),
+                        variant.as_str().into(),
+                        n.to_string(),
+                        seed.to_string(),
+                        format!("{train_s:.6}"),
+                        avg.map(|a| format!("{a:.6}")).unwrap_or_default(),
+                        done.to_string(),
+                        timed_out.to_string(),
+                    ]);
+                    if timed_out && seed + 1 == exp.seeds {
+                        dead.insert((kind, variant));
+                    }
+                }
+            }
+        }
+        println!("  [{}] finished n = {}", id, n);
+    }
+    report.note(
+        "Paper reference (Fig. 2, n = 1e5): optimized k-NN 0.63 s/pred vs \
+         ~2 h standard; optimized LS-SVM 0.21 s vs >24.5 h standard; ICP \
+         fastest throughout. Shape target: optimized ~1 power of n below \
+         standard, ICP flat-ish.",
+    );
+    Ok(report)
+}
+
+/// Figure 3: training time of the optimized measures.
+pub fn run_training_figure(cfg: &Config) -> Result<Report> {
+    let exp = &cfg.experiment;
+    let sizes = if exp.train_sizes.is_empty() {
+        default_grid(exp.paper_scale)
+    } else {
+        exp.train_sizes.clone()
+    };
+    let mut report = Report::new(
+        "fig3",
+        "training time of optimized full CP",
+        &["measure", "n", "seed", "train_s"],
+    );
+    for &n in &sizes {
+        if n < 4 {
+            continue;
+        }
+        for seed in 0..exp.seeds {
+            let ds = dataset(n, 1000 + seed);
+            for kind in figure_measures("fig3") {
+                let mut m = build_measure(kind, &cfg.measure, None);
+                let (_, train_s) = time_once(|| m.fit(&ds));
+                report.push_row(vec![
+                    kind.as_str().into(),
+                    n.to_string(),
+                    seed.to_string(),
+                    format!("{train_s:.6}"),
+                ]);
+            }
+        }
+        println!("  [fig3] finished n = {}", n);
+    }
+    report.note(
+        "Paper reference (Fig. 3): LS-SVM highest training cost, Random \
+         Forest lowest; k-NN/KDE quadratic in n.",
+    );
+    Ok(report)
+}
+
+/// Table 1 validation: fit log-log slopes on the fig2 data and compare
+/// with the analytic complexity exponents.
+pub fn run_table1(cfg: &Config) -> Result<Report> {
+    // run a dedicated, smaller sweep for clean slopes
+    let mut c = cfg.clone();
+    if c.experiment.train_sizes.is_empty() {
+        c.experiment.train_sizes = vec![32, 64, 128, 256, 512, 1024];
+    }
+    c.experiment.seeds = c.experiment.seeds.min(2);
+    let fig2 = run_prediction_figure("table1-sweep", &c)?;
+
+    // aggregate: avg predict per (measure, variant, n)
+    let mut series: std::collections::BTreeMap<(String, String), Vec<(f64, f64)>> =
+        Default::default();
+    for row in &fig2.rows {
+        let (m, v, n, avg) = (&row[0], &row[1], &row[2], &row[5]);
+        if avg.is_empty() {
+            continue;
+        }
+        series
+            .entry((m.clone(), v.clone()))
+            .or_default()
+            .push((n.parse().unwrap(), avg.parse().unwrap()));
+    }
+    let analytic = |m: &str, v: &str| -> &'static str {
+        match (m, v) {
+            ("knn", "standard") | ("simplified-knn", "standard") => "2",
+            ("knn", "optimized") | ("simplified-knn", "optimized") => "1",
+            ("kde", "standard") => "2",
+            ("kde", "optimized") => "1",
+            ("lssvm", "standard") => "w+1 in [3,4]",
+            ("lssvm", "optimized") => "1",
+            ("rf", "standard") => "~2 (T_g(n)·n)",
+            ("rf", "optimized") => "~1..2 (B' effect)",
+            (_, "icp") => "<=1",
+            _ => "?",
+        }
+    };
+    let mut report = Report::new(
+        "table1",
+        "measured log-log growth of predict time vs analytic complexity (Table 1)",
+        &["measure", "variant", "measured_slope", "analytic_exponent", "points"],
+    );
+    for ((m, v), mut pts) in series {
+        pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+        // average duplicate-n entries (seeds)
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let mut i = 0;
+        while i < pts.len() {
+            let n = pts[i].0;
+            let mut s = 0.0;
+            let mut c = 0;
+            while i < pts.len() && pts[i].0 == n {
+                s += pts[i].1;
+                c += 1;
+                i += 1;
+            }
+            xs.push(n);
+            ys.push(s / c as f64);
+        }
+        let slope = loglog_slope(&xs, &ys);
+        report.push_row(vec![
+            m.clone(),
+            v.clone(),
+            format!("{slope:.2}"),
+            analytic(&m, &v).into(),
+            xs.len().to_string(),
+        ]);
+    }
+    report.note(
+        "Slopes below ~0.3 indicate constant-dominated regimes at this \
+         scale (small-n overheads); the standard-vs-optimized gap of ~1 \
+         power of n is the Table 1 claim under test.",
+    );
+    Ok(report)
+}
+
+/// Quick summary rows for the console (used by the CLI).
+pub fn summarize_latest(report: &Report) -> String {
+    let mut out = String::new();
+    let mut latest: std::collections::BTreeMap<(String, String), (f64, String)> =
+        Default::default();
+    for row in &report.rows {
+        if row[5].is_empty() {
+            continue;
+        }
+        let key = (row[0].clone(), row[1].clone());
+        let n: f64 = row[2].parse().unwrap_or(0.0);
+        let cur = latest.entry(key).or_insert((0.0, String::new()));
+        if n >= cur.0 {
+            *cur = (n, row[5].clone());
+        }
+    }
+    for ((m, v), (n, t)) in latest {
+        let secs: f64 = t.parse().unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "    {m:<16} {v:<10} n={n:<8} {}\n",
+            fmt_secs(secs)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> Config {
+        let mut c = Config::default();
+        c.experiment.train_sizes = vec![16, 32];
+        c.experiment.n_test = 2;
+        c.experiment.seeds = 1;
+        c.experiment.timeout_s = 5.0;
+        c.measure.k = 3;
+        c.measure.b = 3;
+        c
+    }
+
+    #[test]
+    fn grid_shapes() {
+        let g = default_grid(false);
+        assert_eq!(g.len(), 9);
+        assert_eq!(g[0], 10);
+        assert!(g[8] > 4000 && g[8] < 5000);
+        let gp = default_grid(true);
+        assert_eq!(gp.len(), 13);
+        assert_eq!(*gp.last().unwrap(), 100_000);
+    }
+
+    #[test]
+    fn fig2_smoke() {
+        let cfg = tiny_cfg();
+        let r = run_prediction_figure("fig2", &cfg).unwrap();
+        // 2 sizes x 1 seed x 4 measures x 3 variants
+        assert_eq!(r.rows.len(), 2 * 4 * 3);
+        assert!(r.rows.iter().all(|row| !row[5].is_empty()));
+    }
+
+    #[test]
+    fn fig3_smoke() {
+        let cfg = tiny_cfg();
+        let r = run_training_figure(&cfg).unwrap();
+        assert_eq!(r.rows.len(), 2 * 5);
+    }
+
+    #[test]
+    fn optimized_beats_standard_at_moderate_n() {
+        let mut cfg = tiny_cfg();
+        cfg.experiment.train_sizes = vec![256];
+        cfg.experiment.n_test = 3;
+        let ds = dataset(256, 9);
+        let probe = dataset(3, 10);
+        let (_, std_avg, _, _) = run_cell(
+            MeasureKind::SimplifiedKnn,
+            Variant::Standard,
+            &ds,
+            &probe,
+            &cfg,
+            Duration::from_secs(30),
+        );
+        let (_, opt_avg, _, _) = run_cell(
+            MeasureKind::SimplifiedKnn,
+            Variant::Optimized,
+            &ds,
+            &probe,
+            &cfg,
+            Duration::from_secs(30),
+        );
+        let (s, o) = (std_avg.unwrap(), opt_avg.unwrap());
+        assert!(
+            o < s,
+            "optimized ({o:.6}s) should beat standard ({s:.6}s) at n=256"
+        );
+    }
+}

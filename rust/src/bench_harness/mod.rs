@@ -1,0 +1,59 @@
+//! Experiment harness: one driver per table/figure of the paper's
+//! evaluation (DESIGN.md §4 maps each to its module), shared timing
+//! infrastructure, and CSV/markdown report emission.
+//!
+//! | id          | paper          | driver                         |
+//! |-------------|----------------|--------------------------------|
+//! | `fig2`      | Figure 2       | [`classification`]             |
+//! | `fig3`      | Figure 3       | [`classification`]             |
+//! | `fig4`      | Figure 4       | [`regression_exp`]             |
+//! | `fig5`      | Figure 5       | [`bootstrap_exp`]              |
+//! | `fig6`      | Figure 6       | [`classification`]             |
+//! | `table1`    | Table 1        | [`classification`] (slope fit) |
+//! | `table2`    | Table 2        | [`mnist_exp`]                  |
+//! | `fuzziness` | App. G table   | [`mnist_exp`]                  |
+//! | `table3`    | Table 3        | [`parallel_exp`]               |
+//! | `iid`       | App. C.5       | [`iid_exp`]                    |
+
+pub mod bootstrap_exp;
+pub mod classification;
+pub mod iid_exp;
+pub mod mnist_exp;
+pub mod parallel_exp;
+pub mod regression_exp;
+pub mod report;
+pub mod timing;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+pub use report::Report;
+
+/// All experiment ids, in suggested execution order (cheap first).
+pub const ALL_EXPERIMENTS: [&str; 10] = [
+    "fig5", "table1", "iid", "fig4", "fig6", "fig2", "fig3", "table3",
+    "fuzziness", "table2",
+];
+
+/// Run one experiment by id, writing its reports to the configured
+/// output directory, and returning the report.
+pub fn run_experiment(id: &str, cfg: &Config) -> Result<Report> {
+    let report = match id {
+        "fig2" => classification::run_prediction_figure("fig2", cfg)?,
+        "fig6" => classification::run_prediction_figure("fig6", cfg)?,
+        "fig3" => classification::run_training_figure(cfg)?,
+        "table1" => classification::run_table1(cfg)?,
+        "fig4" => regression_exp::run_fig4(cfg)?,
+        "fig5" => bootstrap_exp::run_fig5(cfg)?,
+        "table2" => mnist_exp::run_table2(cfg)?,
+        "fuzziness" => mnist_exp::run_fuzziness(cfg)?,
+        "table3" => parallel_exp::run_table3(cfg)?,
+        "iid" => iid_exp::run_iid(cfg)?,
+        other => bail!(
+            "unknown experiment {other:?}; known: {}",
+            ALL_EXPERIMENTS.join(", ")
+        ),
+    };
+    report.write(&cfg.experiment.out_dir)?;
+    Ok(report)
+}

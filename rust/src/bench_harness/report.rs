@@ -1,0 +1,148 @@
+//! Report emission: every experiment driver writes a CSV (machine
+//! readable) and a markdown table (human readable) into the configured
+//! output directory, and EXPERIMENTS.md links to them.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A tabular report under construction.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// free-form notes rendered under the markdown table
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, text: &str) {
+        self.notes.push(text.to_string());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.columns.join(","));
+        for row in &self.rows {
+            let quoted: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            let _ = writeln!(out, "{}", quoted.join(","));
+        }
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# {} — {}\n", self.id, self.title);
+        let _ = writeln!(out, "| {} |", self.columns.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        for note in &self.notes {
+            let _ = writeln!(out, "\n> {note}");
+        }
+        out
+    }
+
+    /// Write `<out_dir>/<id>.csv` and `<out_dir>/<id>.md`.
+    pub fn write(&self, out_dir: &str) -> Result<()> {
+        fs::create_dir_all(out_dir)
+            .with_context(|| format!("creating {out_dir}"))?;
+        let base = Path::new(out_dir);
+        fs::write(base.join(format!("{}.csv", self.id)), self.to_csv())?;
+        fs::write(base.join(format!("{}.md", self.id)), self.to_markdown())?;
+        println!(
+            "wrote {}/{}.csv ({} rows)",
+            out_dir,
+            self.id,
+            self.rows.len()
+        );
+        Ok(())
+    }
+}
+
+/// Format seconds in engineering style (matches how the paper reports
+/// "0.63 seconds" / "2 hours").
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "-".into();
+    }
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else if s < 7200.0 {
+        format!("{:.1}m", s / 60.0)
+    } else {
+        format!("{:.1}h", s / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_markdown_shape() {
+        let mut r = Report::new("t", "demo", &["a", "b"]);
+        r.push_row(vec!["1".into(), "x,y".into()]);
+        r.note("hello");
+        let csv = r.to_csv();
+        assert!(csv.starts_with("a,b\n"));
+        assert!(csv.contains("\"x,y\""));
+        let md = r.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("> hello"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut r = Report::new("t", "demo", &["a", "b"]);
+        r.push_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(0.0000005), "0.5us");
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+        assert_eq!(fmt_secs(1.5), "1.50s");
+        assert_eq!(fmt_secs(300.0), "5.0m");
+        assert_eq!(fmt_secs(7200.0), "2.0h");
+        assert_eq!(fmt_secs(f64::INFINITY), "-");
+    }
+}

@@ -1,0 +1,195 @@
+//! Timing utilities for the experiment drivers: wall-clock measurement
+//! with per-point timeouts (the paper's App. E protocol: the timeout is
+//! checked after each test-point prediction, so it can be exceeded by
+//! at most one prediction), plus summary statistics and a minimal
+//! thread-pool `parallel_map` for the App. H comparison.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing a prediction sweep.
+#[derive(Clone, Debug)]
+pub struct SweepTiming {
+    /// seconds per completed prediction (empty if none completed)
+    pub per_point_s: Vec<f64>,
+    /// true when the timeout stopped the sweep early
+    pub timed_out: bool,
+}
+
+impl SweepTiming {
+    pub fn avg(&self) -> Option<f64> {
+        if self.per_point_s.is_empty() {
+            None
+        } else {
+            Some(self.per_point_s.iter().sum::<f64>() / self.per_point_s.len() as f64)
+        }
+    }
+
+    pub fn completed(&self) -> usize {
+        self.per_point_s.len()
+    }
+}
+
+/// Time `f(i)` for i in 0..n_points, stopping once the cumulative time
+/// exceeds `timeout` (checked after each point, like the paper).
+pub fn time_sweep(
+    n_points: usize,
+    timeout: Duration,
+    mut f: impl FnMut(usize),
+) -> SweepTiming {
+    let mut per_point = Vec::with_capacity(n_points);
+    let start = Instant::now();
+    let mut timed_out = false;
+    for i in 0..n_points {
+        let t0 = Instant::now();
+        f(i);
+        per_point.push(t0.elapsed().as_secs_f64());
+        if start.elapsed() > timeout {
+            timed_out = i + 1 < n_points;
+            break;
+        }
+    }
+    SweepTiming {
+        per_point_s: per_point,
+        timed_out,
+    }
+}
+
+/// Time one closure.
+pub fn time_once<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// mean and sample std
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    crate::cp::metrics::mean_std(xs)
+}
+
+/// Least-squares slope of log(y) vs log(x) — used by the Table 1
+/// validation to compare measured growth exponents with the analytic
+/// complexities.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let pts: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys)
+        .filter(|(&x, &y)| x > 0.0 && y > 0.0)
+        .map(|(&x, &y)| (x.ln(), y.ln()))
+        .collect();
+    let n = pts.len() as f64;
+    if pts.len() < 2 {
+        return f64::NAN;
+    }
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+/// Minimal scoped parallel map over indices (App. H's multiprocessing
+/// analogue): spawns `threads` workers that pull indices from a shared
+/// counter. Results are returned in index order.
+pub fn parallel_map<R: Send>(
+    n: usize,
+    threads: usize,
+    f: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let counter = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<R>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("worker filled every slot"))
+        .collect()
+}
+
+/// Criterion-style microbenchmark (the offline environment has no
+/// criterion crate): warm up, pick an iteration count targeting
+/// ~`budget` of runtime, then report mean ± std per iteration.
+pub fn microbench<R>(name: &str, budget: Duration, mut f: impl FnMut() -> R) -> f64 {
+    // warmup + calibration
+    let t0 = Instant::now();
+    let mut warm_iters = 0u64;
+    while t0.elapsed() < budget / 10 || warm_iters < 3 {
+        std::hint::black_box(f());
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = t0.elapsed().as_secs_f64() / warm_iters as f64;
+    let iters = ((budget.as_secs_f64() / per_iter) as u64).clamp(3, 1_000_000);
+    // measure in 5 batches for a std estimate
+    let batches = 5u64.min(iters);
+    let per_batch = (iters / batches).max(1);
+    let mut samples = Vec::with_capacity(batches as usize);
+    for _ in 0..batches {
+        let t = Instant::now();
+        for _ in 0..per_batch {
+            std::hint::black_box(f());
+        }
+        samples.push(t.elapsed().as_secs_f64() / per_batch as f64);
+    }
+    let (mean, std) = mean_std(&samples);
+    println!(
+        "{name:<44} {:>12}/iter (±{:>10}, {} iters)",
+        crate::bench_harness::report::fmt_secs(mean),
+        crate::bench_harness::report::fmt_secs(std),
+        per_batch * batches,
+    );
+    mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_respects_timeout() {
+        let t = time_sweep(1000, Duration::from_millis(20), |_| {
+            std::thread::sleep(Duration::from_millis(8));
+        });
+        assert!(t.timed_out);
+        assert!(t.completed() >= 2 && t.completed() < 10, "{}", t.completed());
+        assert!(t.avg().unwrap() >= 0.007);
+    }
+
+    #[test]
+    fn sweep_completes_within_budget() {
+        let t = time_sweep(5, Duration::from_secs(10), |_| {});
+        assert!(!t.timed_out);
+        assert_eq!(t.completed(), 5);
+    }
+
+    #[test]
+    fn loglog_slope_recovers_exponent() {
+        let xs: Vec<f64> = (1..=8).map(|i| (10 * i) as f64).collect();
+        let quad: Vec<f64> = xs.iter().map(|x| 3.0 * x * x).collect();
+        assert!((loglog_slope(&xs, &quad) - 2.0).abs() < 1e-9);
+        let lin: Vec<f64> = xs.iter().map(|x| 0.5 * x).collect();
+        assert!((loglog_slope(&xs, &lin) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_map_ordered_and_complete() {
+        let got = parallel_map(100, 4, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,321 @@
+//! Conformal clustering and anomaly detection (paper §9).
+//!
+//! * [`AnomalyDetector`] — conformal anomaly detection (Laxhammar &
+//!   Falkman 2010): flag x as anomalous when its conformal p-value
+//!   under the (Simplified k-NN) measure falls below eps. With the
+//!   optimized measure each query is O(n) instead of O(n^2).
+//! * [`conformal_clustering`] — Cherubin et al. (2015): lay a q x q
+//!   grid over a 2-D projection of the data, compute the p-value of
+//!   each grid-cell centre, keep cells with p > eps, and return the
+//!   4-connected components as clusters. Cost O(n q^2) with the
+//!   optimized measure vs O(n^2 q^2) standard (§9's accounting with
+//!   p = 2).
+//! * [`pca2`] — the 2-D projection substrate (top-2 principal
+//!   components via power iteration with deflation).
+
+use crate::cp::measure::CpMeasure;
+use crate::cp::pvalue::p_value;
+use crate::data::{Dataset, Rng};
+
+/// Project rows onto their top-2 principal components.
+///
+/// Power iteration with Hotelling deflation on the p x p covariance —
+/// adequate for the well-separated spectra of clustering workloads.
+pub fn pca2(x: &[f64], p: usize) -> Vec<f64> {
+    let n = x.len() / p;
+    assert!(n > 1);
+    // column means
+    let mut mean = vec![0.0; p];
+    for i in 0..n {
+        for j in 0..p {
+            mean[j] += x[i * p + j];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    // covariance (p x p)
+    let mut cov = vec![0.0; p * p];
+    for i in 0..n {
+        for a in 0..p {
+            let da = x[i * p + a] - mean[a];
+            for b in a..p {
+                cov[a * p + b] += da * (x[i * p + b] - mean[b]);
+            }
+        }
+    }
+    for a in 0..p {
+        for b in 0..a {
+            cov[a * p + b] = cov[b * p + a];
+        }
+    }
+    let matvec = |m: &[f64], v: &[f64], out: &mut [f64]| {
+        for a in 0..p {
+            out[a] = (0..p).map(|b| m[a * p + b] * v[b]).sum();
+        }
+    };
+    let mut rng = Rng::seed_from(12345);
+    let mut components: Vec<Vec<f64>> = Vec::new();
+    let mut work = cov.clone();
+    for _ in 0..2.min(p) {
+        let mut v: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let mut tmp = vec![0.0; p];
+        for _ in 0..200 {
+            matvec(&work, &v, &mut tmp);
+            let norm = tmp.iter().map(|t| t * t).sum::<f64>().sqrt();
+            if norm < 1e-30 {
+                break;
+            }
+            for (vi, t) in v.iter_mut().zip(&tmp) {
+                *vi = t / norm;
+            }
+        }
+        // deflate: work -= lambda v v^T
+        matvec(&work, &v, &mut tmp);
+        let lambda: f64 = v.iter().zip(&tmp).map(|(a, b)| a * b).sum();
+        for a in 0..p {
+            for b in 0..p {
+                work[a * p + b] -= lambda * v[a] * v[b];
+            }
+        }
+        components.push(v);
+    }
+    while components.len() < 2 {
+        components.push(vec![0.0; p]); // degenerate p=1 input
+    }
+    // project
+    let mut out = vec![0.0; n * 2];
+    for i in 0..n {
+        for (c, comp) in components.iter().enumerate() {
+            out[i * 2 + c] = (0..p)
+                .map(|j| (x[i * p + j] - mean[j]) * comp[j])
+                .sum();
+        }
+    }
+    out
+}
+
+/// Conformal anomaly detector over unlabelled observations.
+pub struct AnomalyDetector<M: CpMeasure> {
+    measure: M,
+    eps: f64,
+}
+
+impl<M: CpMeasure> AnomalyDetector<M> {
+    /// Train on normal observations (labels collapsed to one class).
+    pub fn train(mut measure: M, x: &[f64], p: usize, eps: f64) -> Self {
+        let n = x.len() / p;
+        let ds = Dataset::new(x.to_vec(), vec![0; n], p, 1);
+        measure.fit(&ds);
+        AnomalyDetector { measure, eps }
+    }
+
+    /// Conformal p-value of an observation.
+    pub fn p_value(&self, x: &[f64]) -> f64 {
+        p_value(&self.measure.scores(x, 0))
+    }
+
+    /// Anomaly iff p <= eps (guaranteed <= eps false-alarm rate under
+    /// exchangeability).
+    pub fn is_anomaly(&self, x: &[f64]) -> bool {
+        self.p_value(x) <= self.eps
+    }
+
+    /// Learn a confirmed-normal observation online (optimized measures).
+    pub fn learn(&mut self, x: &[f64]) -> bool {
+        self.measure.learn(x, 0)
+    }
+}
+
+/// A conformal clustering result.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// grid side length
+    pub q: usize,
+    /// cluster id per grid cell (usize::MAX = not in any cluster)
+    pub cell_cluster: Vec<usize>,
+    /// number of clusters found
+    pub n_clusters: usize,
+    /// cluster id per input point (usize::MAX = noise)
+    pub point_cluster: Vec<usize>,
+    /// grid bounding box in the projected plane
+    pub bounds: [f64; 4],
+}
+
+/// Conformal clustering (Cherubin et al. 2015) on a 2-D projection.
+///
+/// `measure` scores grid-cell centres against the (projected) points;
+/// cells whose conformal p-value exceeds `eps` form the clusters.
+pub fn conformal_clustering<M: CpMeasure>(
+    mut measure: M,
+    x: &[f64],
+    p: usize,
+    q: usize,
+    eps: f64,
+) -> Clustering {
+    let proj = if p == 2 { x.to_vec() } else { pca2(x, p) };
+    let n = proj.len() / 2;
+    let ds = Dataset::new(proj.clone(), vec![0; n], 2, 1);
+    measure.fit(&ds);
+
+    // bounding box with a margin of one cell
+    let (mut x0, mut x1, mut y0, mut y1) =
+        (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+    for i in 0..n {
+        x0 = x0.min(proj[i * 2]);
+        x1 = x1.max(proj[i * 2]);
+        y0 = y0.min(proj[i * 2 + 1]);
+        y1 = y1.max(proj[i * 2 + 1]);
+    }
+    let dx = ((x1 - x0) / q as f64).max(1e-12);
+    let dy = ((y1 - y0) / q as f64).max(1e-12);
+
+    // p-value per cell centre
+    let mut keep = vec![false; q * q];
+    for gy in 0..q {
+        for gx in 0..q {
+            let cx = x0 + (gx as f64 + 0.5) * dx;
+            let cy = y0 + (gy as f64 + 0.5) * dy;
+            let pv = p_value(&measure.scores(&[cx, cy], 0));
+            keep[gy * q + gx] = pv > eps;
+        }
+    }
+
+    // 4-connected components over kept cells
+    let mut cell_cluster = vec![usize::MAX; q * q];
+    let mut n_clusters = 0usize;
+    let mut stack = Vec::new();
+    for start in 0..q * q {
+        if !keep[start] || cell_cluster[start] != usize::MAX {
+            continue;
+        }
+        let id = n_clusters;
+        n_clusters += 1;
+        stack.push(start);
+        cell_cluster[start] = id;
+        while let Some(c) = stack.pop() {
+            let (gy, gx) = (c / q, c % q);
+            let mut push = |ny: usize, nx: usize| {
+                let nc = ny * q + nx;
+                if keep[nc] && cell_cluster[nc] == usize::MAX {
+                    cell_cluster[nc] = id;
+                    stack.push(nc);
+                }
+            };
+            if gx > 0 {
+                push(gy, gx - 1);
+            }
+            if gx + 1 < q {
+                push(gy, gx + 1);
+            }
+            if gy > 0 {
+                push(gy - 1, gx);
+            }
+            if gy + 1 < q {
+                push(gy + 1, gx);
+            }
+        }
+    }
+
+    // assign points to the cluster of their containing cell
+    let point_cluster: Vec<usize> = (0..n)
+        .map(|i| {
+            let gx = (((proj[i * 2] - x0) / dx) as usize).min(q - 1);
+            let gy = (((proj[i * 2 + 1] - y0) / dy) as usize).min(q - 1);
+            cell_cluster[gy * q + gx]
+        })
+        .collect();
+
+    Clustering {
+        q,
+        cell_cluster,
+        n_clusters,
+        point_cluster,
+        bounds: [x0, x1, y0, y1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::measures::knn::KnnOptimized;
+
+    /// two well-separated Gaussian blobs in 2-D
+    fn blobs(n_per: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::seed_from(seed);
+        let mut out = Vec::with_capacity(n_per * 4);
+        for c in 0..2 {
+            let off = c as f64 * 10.0;
+            for _ in 0..n_per {
+                out.push(off + 0.5 * rng.normal());
+                out.push(off + 0.5 * rng.normal());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn clustering_finds_two_blobs() {
+        let x = blobs(60, 1);
+        let c = conformal_clustering(KnnOptimized::new(5, true), &x, 2, 24, 0.08);
+        assert_eq!(c.n_clusters, 2, "clusters: {}", c.n_clusters);
+        // points of the same blob share a cluster id
+        let first_blob = &c.point_cluster[..60];
+        let second_blob = &c.point_cluster[60..];
+        let id0 = first_blob.iter().find(|&&i| i != usize::MAX).unwrap();
+        let id1 = second_blob.iter().find(|&&i| i != usize::MAX).unwrap();
+        assert_ne!(id0, id1);
+        let same0 = first_blob.iter().filter(|&&i| i == *id0).count();
+        assert!(same0 > 50, "blob-0 agreement {same0}");
+    }
+
+    #[test]
+    fn anomaly_detector_flags_outlier_not_inlier() {
+        let x = blobs(80, 2);
+        let det =
+            AnomalyDetector::train(KnnOptimized::new(5, true), &x, 2, 0.05);
+        // an inlier near blob 0
+        assert!(!det.is_anomaly(&[0.1, -0.2]));
+        // a far outlier
+        assert!(det.is_anomaly(&[100.0, -50.0]));
+    }
+
+    #[test]
+    fn anomaly_false_alarm_rate_bounded() {
+        let x = blobs(100, 3);
+        let det =
+            AnomalyDetector::train(KnnOptimized::new(5, true), &x, 2, 0.1);
+        // fresh exchangeable points: alarm rate should be ~<= eps (+fuzz)
+        let fresh = blobs(50, 4);
+        let alarms = (0..100)
+            .filter(|&i| det.is_anomaly(&fresh[i * 2..i * 2 + 2]))
+            .count();
+        assert!(alarms <= 22, "false alarms {alarms}/100");
+    }
+
+    #[test]
+    fn pca2_projects_to_dominant_plane() {
+        // 5-D data with variance concentrated in dims 0 and 1
+        let mut rng = Rng::seed_from(5);
+        let n = 200;
+        let mut x = vec![0.0; n * 5];
+        for i in 0..n {
+            x[i * 5] = 10.0 * rng.normal();
+            x[i * 5 + 1] = 5.0 * rng.normal();
+            for j in 2..5 {
+                x[i * 5 + j] = 0.01 * rng.normal();
+            }
+        }
+        let proj = pca2(&x, 5);
+        // projected variance ~ original dominant variances
+        let var = |k: usize| -> f64 {
+            let m: f64 = (0..n).map(|i| proj[i * 2 + k]).sum::<f64>() / n as f64;
+            (0..n)
+                .map(|i| (proj[i * 2 + k] - m).powi(2))
+                .sum::<f64>()
+                / n as f64
+        };
+        assert!(var(0) > 50.0, "pc1 var {}", var(0));
+        assert!(var(1) > 10.0, "pc2 var {}", var(1));
+    }
+}

@@ -1,0 +1,263 @@
+//! Configuration system: TOML-lite files + CLI overrides.
+//!
+//! One config drives the launcher (`repro serve`), the experiment
+//! drivers (`repro experiment <id>`), and the examples, so runs are
+//! declarative and reproducible. Parsing is in-tree
+//! ([`crate::util::toml_lite`]) — the offline environment ships no
+//! serde/toml crates.
+
+use crate::util::toml_lite::{self, Doc};
+use crate::Result;
+
+/// Which nonconformity measure a deployment/experiment uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MeasureKind {
+    Knn,
+    SimplifiedKnn,
+    Kde,
+    LsSvm,
+    RandomForest,
+}
+
+impl MeasureKind {
+    pub fn all() -> [MeasureKind; 5] {
+        [
+            MeasureKind::Knn,
+            MeasureKind::SimplifiedKnn,
+            MeasureKind::Kde,
+            MeasureKind::LsSvm,
+            MeasureKind::RandomForest,
+        ]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MeasureKind::Knn => "knn",
+            MeasureKind::SimplifiedKnn => "simplified-knn",
+            MeasureKind::Kde => "kde",
+            MeasureKind::LsSvm => "lssvm",
+            MeasureKind::RandomForest => "rf",
+        }
+    }
+}
+
+impl std::str::FromStr for MeasureKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "knn" => MeasureKind::Knn,
+            "simplified-knn" | "sknn" => MeasureKind::SimplifiedKnn,
+            "kde" => MeasureKind::Kde,
+            "lssvm" | "ls-svm" => MeasureKind::LsSvm,
+            "rf" | "random-forest" | "bootstrap" => MeasureKind::RandomForest,
+            other => anyhow::bail!("unknown measure {other:?}"),
+        })
+    }
+}
+
+/// Measure hyperparameters (paper App. E defaults).
+#[derive(Clone, Debug)]
+pub struct MeasureConfig {
+    /// k for the nearest-neighbour measures
+    pub k: usize,
+    /// KDE bandwidth
+    pub h: f64,
+    /// LS-SVM ridge parameter
+    pub rho: f64,
+    /// bootstrap ensemble size
+    pub b: usize,
+    /// RFF feature dimension (0 = linear kernel)
+    pub rff_dim: usize,
+    /// RFF kernel bandwidth
+    pub rff_gamma: f64,
+}
+
+impl Default for MeasureConfig {
+    fn default() -> Self {
+        MeasureConfig {
+            k: 15,
+            h: 1.0,
+            rho: 1.0,
+            b: 10,
+            rff_dim: 0,
+            rff_gamma: 0.5,
+        }
+    }
+}
+
+/// Serving-coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// max requests drained per batch
+    pub max_batch: usize,
+    /// max time a request waits for batching (microseconds)
+    pub max_wait_us: u64,
+    /// significance level used when a request does not specify one
+    pub default_epsilon: f64,
+    /// worker threads processing batches
+    pub workers: usize,
+    /// bounded queue depth before backpressure rejects
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            max_batch: 32,
+            max_wait_us: 2_000,
+            default_epsilon: 0.1,
+            workers: 2,
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// Experiment-harness configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// training sizes (log grid); empty = driver default
+    pub train_sizes: Vec<usize>,
+    /// test points per configuration
+    pub n_test: usize,
+    /// repeats (seeds) per configuration
+    pub seeds: u64,
+    /// per-point timeout in seconds (paper: 10 h; scaled default here)
+    pub timeout_s: f64,
+    /// output directory for CSV/markdown reports
+    pub out_dir: String,
+    /// use the paper's full-size grids (hours of runtime)
+    pub paper_scale: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            train_sizes: Vec::new(),
+            n_test: 10,
+            seeds: 3,
+            timeout_s: 20.0,
+            out_dir: "results".into(),
+            paper_scale: false,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub measure: MeasureConfig,
+    pub serve: ServeConfig,
+    pub experiment: ExperimentConfig,
+    /// PJRT backend for distance kernels (native when false)
+    pub use_pjrt: bool,
+    /// artifact directory for AOT HLO modules
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            measure: MeasureConfig::default(),
+            serve: ServeConfig::default(),
+            experiment: ExperimentConfig::default(),
+            use_pjrt: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Build from a parsed TOML-lite document, defaulting every field.
+    pub fn from_doc(doc: &Doc) -> Config {
+        let d = Config::default();
+        Config {
+            measure: MeasureConfig {
+                k: doc.usize_or("measure.k", d.measure.k),
+                h: doc.f64_or("measure.h", d.measure.h),
+                rho: doc.f64_or("measure.rho", d.measure.rho),
+                b: doc.usize_or("measure.b", d.measure.b),
+                rff_dim: doc.usize_or("measure.rff_dim", d.measure.rff_dim),
+                rff_gamma: doc.f64_or("measure.rff_gamma", d.measure.rff_gamma),
+            },
+            serve: ServeConfig {
+                addr: doc.str_or("serve.addr", &d.serve.addr),
+                max_batch: doc.usize_or("serve.max_batch", d.serve.max_batch),
+                max_wait_us: doc.u64_or("serve.max_wait_us", d.serve.max_wait_us),
+                default_epsilon: doc
+                    .f64_or("serve.default_epsilon", d.serve.default_epsilon),
+                workers: doc.usize_or("serve.workers", d.serve.workers),
+                queue_depth: doc.usize_or("serve.queue_depth", d.serve.queue_depth),
+            },
+            experiment: ExperimentConfig {
+                train_sizes: doc.usize_array("experiment.train_sizes"),
+                n_test: doc.usize_or("experiment.n_test", d.experiment.n_test),
+                seeds: doc.u64_or("experiment.seeds", d.experiment.seeds),
+                timeout_s: doc.f64_or("experiment.timeout_s", d.experiment.timeout_s),
+                out_dir: doc.str_or("experiment.out_dir", &d.experiment.out_dir),
+                paper_scale: doc
+                    .bool_or("experiment.paper_scale", d.experiment.paper_scale),
+            },
+            use_pjrt: doc.bool_or("use_pjrt", d.use_pjrt),
+            artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir),
+        }
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::from_doc(&toml_lite::parse(&text)?))
+    }
+
+    pub fn load_or_default(path: Option<&str>) -> Result<Config> {
+        match path {
+            Some(p) => Self::load(p),
+            None => Ok(Config::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_appendix_e() {
+        let c = MeasureConfig::default();
+        assert_eq!(c.k, 15);
+        assert_eq!(c.h, 1.0);
+        assert_eq!(c.rho, 1.0);
+        assert_eq!(c.b, 10);
+    }
+
+    #[test]
+    fn partial_doc_keeps_defaults() {
+        let doc = toml_lite::parse(
+            r#"
+            use_pjrt = true
+            [measure]
+            k = 7
+            [serve]
+            max_batch = 8
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc);
+        assert!(c.use_pjrt);
+        assert_eq!(c.measure.k, 7);
+        assert_eq!(c.measure.b, 10);
+        assert_eq!(c.serve.max_batch, 8);
+        assert_eq!(c.serve.workers, 2);
+    }
+
+    #[test]
+    fn measure_kind_parses() {
+        use std::str::FromStr;
+        assert_eq!(MeasureKind::from_str("knn").unwrap(), MeasureKind::Knn);
+        assert_eq!(
+            MeasureKind::from_str("random-forest").unwrap(),
+            MeasureKind::RandomForest
+        );
+        assert!(MeasureKind::from_str("bogus").is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Dynamic batcher: a bounded MPMC queue whose consumers drain up to
+//! `max_batch` items, waiting at most `max_wait` for stragglers once the
+//! first item arrives — the standard serving trade-off between batching
+//! efficiency and tail latency. Backpressure: `push` fails fast when the
+//! queue is full, so the TCP front end can shed load instead of queueing
+//! unboundedly.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Bounded batch queue.
+pub struct Batcher<T> {
+    q: Mutex<State<T>>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Why `push` failed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// queue at capacity (backpressure — shed load)
+    Full,
+    /// batcher shut down
+    Closed,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration, capacity: usize) -> Self {
+        assert!(max_batch >= 1);
+        Batcher {
+            q: Mutex::new(State {
+                items: VecDeque::with_capacity(capacity.min(4096)),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            max_batch,
+            max_wait,
+            capacity,
+        }
+    }
+
+    /// Enqueue one item (non-blocking; backpressure via `PushError::Full`).
+    pub fn push(&self, item: T) -> Result<(), PushError> {
+        let mut st = self.q.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed);
+        }
+        if st.items.len() >= self.capacity {
+            return Err(PushError::Full);
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block until at least one item is available (or closed), then
+    /// drain up to `max_batch`, waiting `max_wait` for the batch to fill.
+    /// Returns None when closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut st = self.q.lock().unwrap();
+        // wait for the first item
+        while st.items.is_empty() {
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        // give stragglers a chance to fill the batch
+        let deadline = Instant::now() + self.max_wait;
+        while st.items.len() < self.max_batch && !st.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = st.items.len().min(self.max_batch);
+        Some(st.items.drain(..take).collect())
+    }
+
+    /// Current depth (diagnostics).
+    pub fn depth(&self) -> usize {
+        self.q.lock().unwrap().items.len()
+    }
+
+    /// Shut down: wakes all consumers; subsequent pushes fail.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn batches_up_to_max() {
+        let b = Batcher::new(3, Duration::from_millis(5), 100);
+        for i in 0..7 {
+            b.push(i).unwrap();
+        }
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2]);
+        assert_eq!(b.next_batch().unwrap(), vec![3, 4, 5]);
+        assert_eq!(b.next_batch().unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let b = Batcher::new(4, Duration::from_millis(1), 2);
+        b.push(1).unwrap();
+        b.push(2).unwrap();
+        assert_eq!(b.push(3), Err(PushError::Full));
+    }
+
+    #[test]
+    fn close_drains_and_stops() {
+        let b = Batcher::new(4, Duration::from_millis(1), 10);
+        b.push(1).unwrap();
+        b.close();
+        assert_eq!(b.push(2), Err(PushError::Closed));
+        assert_eq!(b.next_batch().unwrap(), vec![1]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn consumer_wakes_on_late_producer() {
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(2), 100));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.push(42).unwrap();
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got, vec![42]);
+    }
+
+    #[test]
+    fn straggler_window_fills_batch() {
+        let b = Arc::new(Batcher::new(2, Duration::from_millis(200), 100));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        b.push(1).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        b.push(2).unwrap();
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got, vec![1, 2], "straggler should join the batch");
+    }
+}

@@ -1,0 +1,137 @@
+//! Measure factory: configuration -> boxed nonconformity measure.
+
+use std::sync::Arc;
+
+use crate::config::{MeasureConfig, MeasureKind};
+use crate::cp::measure::CpMeasure;
+use crate::linalg::engine::Engine;
+use crate::measures::{
+    BootstrapOptimized, BootstrapParams, BootstrapStandard, FeatureMap,
+    KdeOptimized, KdeStandard, KnnOptimized, KnnStandard, LsSvmOptimized,
+    LsSvmStandard,
+};
+use crate::runtime::{PjrtEngine, PjrtRuntime};
+
+fn feature_map(cfg: &MeasureConfig) -> FeatureMap {
+    if cfg.rff_dim == 0 {
+        FeatureMap::Linear
+    } else {
+        FeatureMap::Rff {
+            q: cfg.rff_dim,
+            gamma: cfg.rff_gamma,
+            seed: 7,
+        }
+    }
+}
+
+/// Build an *optimized* measure (the serving default).
+pub fn build_measure(
+    kind: MeasureKind,
+    cfg: &MeasureConfig,
+    engine: Option<Engine>,
+) -> Box<dyn CpMeasure> {
+    let eng = engine.unwrap_or_else(crate::linalg::engine::native);
+    match kind {
+        MeasureKind::Knn => Box::new(KnnOptimized::with_engine(cfg.k, false, eng)),
+        MeasureKind::SimplifiedKnn => {
+            Box::new(KnnOptimized::with_engine(cfg.k, true, eng))
+        }
+        MeasureKind::Kde => Box::new(KdeOptimized::with_engine(cfg.h, eng)),
+        MeasureKind::LsSvm => {
+            Box::new(LsSvmOptimized::new(cfg.rho, feature_map(cfg)))
+        }
+        MeasureKind::RandomForest => Box::new(BootstrapOptimized::new(
+            BootstrapParams {
+                b: cfg.b,
+                ..Default::default()
+            },
+        )),
+    }
+}
+
+/// Build a *standard* (unoptimized) measure — the paper's baselines.
+pub fn build_standard_measure(
+    kind: MeasureKind,
+    cfg: &MeasureConfig,
+) -> Box<dyn CpMeasure> {
+    match kind {
+        MeasureKind::Knn => Box::new(KnnStandard::new(cfg.k, false)),
+        MeasureKind::SimplifiedKnn => Box::new(KnnStandard::new(cfg.k, true)),
+        MeasureKind::Kde => Box::new(KdeStandard::new(cfg.h)),
+        MeasureKind::LsSvm => {
+            Box::new(LsSvmStandard::new(cfg.rho, feature_map(cfg)))
+        }
+        MeasureKind::RandomForest => Box::new(BootstrapStandard::new(
+            BootstrapParams {
+                b: cfg.b,
+                ..Default::default()
+            },
+        )),
+    }
+}
+
+/// Engine selection honouring `use_pjrt` (falls back to native with a
+/// warning when artifacts are missing).
+pub fn select_engine(use_pjrt: bool, artifacts_dir: &str) -> Engine {
+    if use_pjrt {
+        match PjrtRuntime::open(artifacts_dir) {
+            Ok(rt) => return Arc::new(PjrtEngine::new(Arc::new(rt))),
+            Err(e) => eprintln!(
+                "warning: use_pjrt requested but artifacts unavailable \
+                 ({e}); falling back to the native engine"
+            ),
+        }
+    }
+    crate::linalg::engine::native()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{make_classification, ClassificationSpec};
+
+    #[test]
+    fn factory_builds_every_kind() {
+        let cfg = MeasureConfig::default();
+        let ds = make_classification(
+            &ClassificationSpec {
+                n_samples: 24,
+                ..Default::default()
+            },
+            1,
+        );
+        for kind in MeasureKind::all() {
+            let mut m = build_measure(kind, &cfg, None);
+            m.fit(&ds);
+            let s = m.scores(ds.row(0), 0);
+            assert_eq!(s.train.len(), 24, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn standard_factory_builds_every_kind() {
+        let cfg = MeasureConfig {
+            b: 3,
+            ..Default::default()
+        };
+        let ds = make_classification(
+            &ClassificationSpec {
+                n_samples: 10,
+                ..Default::default()
+            },
+            2,
+        );
+        for kind in MeasureKind::all() {
+            let mut m = build_standard_measure(kind, &cfg);
+            m.fit(&ds);
+            let s = m.scores(ds.row(0), 1);
+            assert_eq!(s.train.len(), 10, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn select_engine_falls_back() {
+        let eng = select_engine(true, "/nonexistent/artifacts");
+        assert_eq!(eng.name(), "native");
+    }
+}

@@ -1,0 +1,132 @@
+//! Serving metrics: lock-free counters + a fixed-bucket latency
+//! histogram (microseconds, log-spaced), snapshotted as JSON for the
+//! `stats` RPC.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// log-spaced latency bucket upper bounds, in microseconds
+const BUCKETS_US: [u64; 12] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 100_000, 1_000_000,
+    u64::MAX,
+];
+
+/// Coordinator metrics (all relaxed atomics; serving-side hot path).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub predictions: AtomicU64,
+    pub online_updates: AtomicU64,
+    pub rejected: AtomicU64,
+    pub errors: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    latency: [AtomicU64; 12],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe_latency_us(&self, us: u64) {
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(11);
+        self.latency[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Approximate latency quantile from the histogram.
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self
+            .latency
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.latency.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return BUCKETS_US[i];
+            }
+        }
+        BUCKETS_US[11]
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.predictions.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batched_items.load(Ordering::Relaxed);
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            (
+                "predictions",
+                Json::Num(self.predictions.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "online_updates",
+                Json::Num(self.online_updates.load(Ordering::Relaxed) as f64),
+            ),
+            ("rejected", Json::Num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::Num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(batches as f64)),
+            (
+                "mean_batch_size",
+                Json::Num(if batches == 0 {
+                    0.0
+                } else {
+                    items as f64 / batches as f64
+                }),
+            ),
+            ("mean_latency_us", Json::Num(self.mean_latency_us())),
+            ("p50_latency_us", Json::Num(self.latency_quantile_us(0.5) as f64)),
+            ("p99_latency_us", Json::Num(self.latency_quantile_us(0.99) as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.observe_latency_us(80); // bucket <=100
+        }
+        for _ in 0..10 {
+            m.observe_latency_us(400_000); // bucket <=1s
+        }
+        assert_eq!(m.latency_quantile_us(0.5), 100);
+        assert_eq!(m.latency_quantile_us(0.99), 1_000_000);
+    }
+
+    #[test]
+    fn snapshot_has_fields() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(4);
+        m.record_batch(2);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").unwrap().as_f64(), Some(3.0));
+        assert_eq!(s.get("mean_batch_size").unwrap().as_f64(), Some(3.0));
+    }
+}

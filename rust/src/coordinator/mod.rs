@@ -1,0 +1,25 @@
+//! L3 serving coordinator.
+//!
+//! A deployable conformal-prediction service around the optimized
+//! measures: a TCP JSON-lines server with a *dynamic batcher*, a worker
+//! pool, per-deployment state with online **learn/unlearn** (the
+//! incremental&decremental capability is what makes online serving
+//! cheap — §9's online-learning discussion), backpressure, and metrics.
+//!
+//! - [`factory`]  — build measures from [`crate::config::MeasureKind`];
+//! - [`state`]    — deployment registry (trained CP per measure);
+//! - [`batcher`]  — bounded queue + deadline-based batch draining;
+//! - [`metrics`]  — counters and latency histograms;
+//! - [`server`]   — the TCP front end and worker loop.
+
+pub mod batcher;
+pub mod factory;
+pub mod metrics;
+pub mod server;
+pub mod state;
+
+pub use batcher::Batcher;
+pub use factory::build_measure;
+pub use metrics::Metrics;
+pub use server::{serve, Server};
+pub use state::{Deployment, Registry};

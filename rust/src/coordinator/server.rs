@@ -1,0 +1,379 @@
+//! The serving front end: JSON-lines over TCP, dynamic batching, worker
+//! pool, online updates, metrics.
+//!
+//! Protocol (one JSON object per line, response mirrors request `id`):
+//!
+//! ```text
+//! -> {"op":"predict","deployment":"knn","x":[...],"epsilon":0.1,"id":1}
+//! <- {"id":1,"p_values":[0.8,0.05],"set":[0],"forced":0}
+//! -> {"op":"learn","deployment":"knn","x":[...],"y":1}
+//! <- {"ok":true,"n_train":101,"version":1}
+//! -> {"op":"unlearn","deployment":"knn","index":17}
+//! -> {"op":"stats"} | {"op":"list"} | {"op":"ping"} | {"op":"shutdown"}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::{Batcher, PushError};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::state::Registry;
+use crate::util::json::Json;
+
+/// One queued prediction job.
+struct Job {
+    deployment: String,
+    x: Vec<f64>,
+    eps: f64,
+    enqueued: Instant,
+    resp: mpsc::Sender<Json>,
+}
+
+/// The coordinator server: registry + batcher + workers + metrics.
+pub struct Server {
+    pub registry: Arc<Registry>,
+    pub metrics: Arc<Metrics>,
+    batcher: Arc<Batcher<Job>>,
+    cfg: ServeConfig,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Start the worker pool (does not bind the socket — see [`serve`]).
+    pub fn start(cfg: ServeConfig, registry: Arc<Registry>) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let batcher = Arc::new(Batcher::new(
+            cfg.max_batch,
+            Duration::from_micros(cfg.max_wait_us),
+            cfg.queue_depth,
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let b = batcher.clone();
+                let reg = registry.clone();
+                let met = metrics.clone();
+                std::thread::spawn(move || {
+                    while let Some(batch) = b.next_batch() {
+                        met.record_batch(batch.len());
+                        for job in batch {
+                            let out = Self::run_job(&reg, &job);
+                            met.observe_latency_us(
+                                job.enqueued.elapsed().as_micros() as u64,
+                            );
+                            met.predictions.fetch_add(1, Ordering::Relaxed);
+                            let _ = job.resp.send(out);
+                        }
+                    }
+                })
+            })
+            .collect();
+        Server {
+            registry,
+            metrics,
+            batcher,
+            cfg,
+            workers,
+            stop,
+        }
+    }
+
+    fn run_job(reg: &Registry, job: &Job) -> Json {
+        match reg.with(&job.deployment, |d| {
+            let ps = d.p_values(&job.x);
+            let set: Vec<Json> = ps
+                .iter()
+                .enumerate()
+                .filter(|(_, &p)| p > job.eps)
+                .map(|(y, _)| Json::Num(y as f64))
+                .collect();
+            let forced = ps
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(y, _)| y)
+                .unwrap_or(0);
+            Json::obj(vec![
+                ("p_values", Json::from_f64_slice(&ps)),
+                ("set", Json::Arr(set)),
+                ("forced", Json::Num(forced as f64)),
+            ])
+        }) {
+            Ok(j) => j,
+            Err(e) => err_json(&e.to_string()),
+        }
+    }
+
+    /// Handle one request object (in-process entry point; the TCP layer
+    /// and the tests both go through here).
+    pub fn handle(&self, req: &Json) -> Json {
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let id = req.get("id").cloned().unwrap_or(Json::Null);
+        let mut out = match req.get("op").and_then(Json::as_str) {
+            Some("predict") => self.handle_predict(req),
+            Some("learn") => self.handle_learn(req),
+            Some("unlearn") => self.handle_unlearn(req),
+            Some("stats") => self.metrics.snapshot(),
+            Some("list") => Json::obj(vec![(
+                "deployments",
+                Json::Arr(
+                    self.registry
+                        .names()
+                        .into_iter()
+                        .map(Json::Str)
+                        .collect(),
+                ),
+            )]),
+            Some("ping") => Json::obj(vec![("ok", Json::Bool(true))]),
+            Some("shutdown") => {
+                self.stop.store(true, Ordering::SeqCst);
+                Json::obj(vec![("ok", Json::Bool(true))])
+            }
+            _ => err_json("unknown or missing op"),
+        };
+        if let Json::Obj(m) = &mut out {
+            m.insert("id".into(), id);
+        }
+        out
+    }
+
+    fn handle_predict(&self, req: &Json) -> Json {
+        let Some(dep) = req.get("deployment").and_then(Json::as_str) else {
+            return err_json("missing deployment");
+        };
+        let Some(x) = req.get("x").and_then(Json::as_f64_vec) else {
+            return err_json("missing x");
+        };
+        let eps = req
+            .get("epsilon")
+            .and_then(Json::as_f64)
+            .unwrap_or(self.cfg.default_epsilon);
+        let (tx, rx) = mpsc::channel();
+        let job = Job {
+            deployment: dep.to_string(),
+            x,
+            eps,
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        match self.batcher.push(job) {
+            Ok(()) => match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(j) => j,
+                Err(_) => {
+                    self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    err_json("prediction timed out")
+                }
+            },
+            Err(PushError::Full) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                err_json("overloaded (backpressure)")
+            }
+            Err(PushError::Closed) => err_json("shutting down"),
+        }
+    }
+
+    fn handle_learn(&self, req: &Json) -> Json {
+        let (Some(dep), Some(x), Some(y)) = (
+            req.get("deployment").and_then(Json::as_str),
+            req.get("x").and_then(Json::as_f64_vec),
+            req.get("y").and_then(Json::as_usize),
+        ) else {
+            return err_json("learn needs deployment, x, y");
+        };
+        match self.registry.with_mut(dep, |d| d.learn(&x, y).map(|_| {
+            (d.n_train(), d.version)
+        })) {
+            Ok(Ok((n, v))) => {
+                self.metrics.online_updates.fetch_add(1, Ordering::Relaxed);
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("n_train", Json::Num(n as f64)),
+                    ("version", Json::Num(v as f64)),
+                ])
+            }
+            Ok(Err(e)) | Err(e) => err_json(&e.to_string()),
+        }
+    }
+
+    fn handle_unlearn(&self, req: &Json) -> Json {
+        let (Some(dep), Some(idx)) = (
+            req.get("deployment").and_then(Json::as_str),
+            req.get("index").and_then(Json::as_usize),
+        ) else {
+            return err_json("unlearn needs deployment, index");
+        };
+        match self.registry.with_mut(dep, |d| d.unlearn(idx).map(|_| {
+            (d.n_train(), d.version)
+        })) {
+            Ok(Ok((n, v))) => {
+                self.metrics.online_updates.fetch_add(1, Ordering::Relaxed);
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("n_train", Json::Num(n as f64)),
+                    ("version", Json::Num(v as f64)),
+                ])
+            }
+            Ok(Err(e)) | Err(e) => err_json(&e.to_string()),
+        }
+    }
+
+    pub fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: close the batcher and join workers.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+/// Serve a TCP listener until a `shutdown` op arrives. One thread per
+/// connection (connections are expected to be few and long-lived; the
+/// concurrency knob that matters is the worker pool).
+pub fn serve(server: Arc<Server>, listener: TcpListener) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !server.stopping() {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let srv = server.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(srv, stream);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(server: Arc<Server>, stream: TcpStream) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Json::parse(&line) {
+            Ok(req) => server.handle(&req),
+            Err(e) => err_json(&format!("bad json: {e}")),
+        };
+        writer.write_all(resp.encode().as_bytes())?;
+        writer.write_all(b"\n")?;
+        if server.stopping() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MeasureConfig, MeasureKind};
+    use crate::coordinator::state::Deployment;
+    use crate::data::{make_classification, ClassificationSpec};
+
+    fn test_server() -> Arc<Server> {
+        let ds = make_classification(
+            &ClassificationSpec {
+                n_samples: 40,
+                ..Default::default()
+            },
+            1,
+        );
+        let reg = Arc::new(Registry::new());
+        reg.insert(Deployment::train(
+            "knn",
+            MeasureKind::SimplifiedKnn,
+            &MeasureConfig {
+                k: 3,
+                ..Default::default()
+            },
+            &ds,
+            None,
+        ));
+        Arc::new(Server::start(
+            ServeConfig {
+                workers: 2,
+                max_wait_us: 100,
+                ..Default::default()
+            },
+            reg,
+        ))
+    }
+
+    #[test]
+    fn predict_roundtrip_inprocess() {
+        let srv = test_server();
+        let req = Json::parse(
+            r#"{"op":"predict","deployment":"knn","x":[0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0],"epsilon":0.05,"id":7}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("id").unwrap().as_f64(), Some(7.0));
+        let ps = resp.get("p_values").unwrap().as_f64_vec().unwrap();
+        assert_eq!(ps.len(), 2);
+        assert!(resp.get("forced").is_some());
+    }
+
+    #[test]
+    fn learn_increases_n() {
+        let srv = test_server();
+        let x: Vec<f64> = vec![0.0; 30];
+        let req = Json::obj(vec![
+            ("op", Json::Str("learn".into())),
+            ("deployment", Json::Str("knn".into())),
+            ("x", Json::from_f64_slice(&x)),
+            ("y", Json::Num(1.0)),
+        ]);
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("n_train").unwrap().as_f64(), Some(41.0));
+    }
+
+    #[test]
+    fn unknown_deployment_is_clean_error() {
+        let srv = test_server();
+        let req = Json::parse(
+            r#"{"op":"predict","deployment":"nope","x":[1,2,3]}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn stats_and_list() {
+        let srv = test_server();
+        let list = srv.handle(&Json::parse(r#"{"op":"list"}"#).unwrap());
+        let deps = list.get("deployments").unwrap().as_arr().unwrap();
+        assert_eq!(deps.len(), 1);
+        let stats = srv.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+        assert!(stats.get("requests").is_some());
+    }
+}

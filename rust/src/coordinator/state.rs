@@ -1,0 +1,203 @@
+//! Deployment registry: named, independently-trained CP instances with
+//! online learn/unlearn — the coordinator's state-management layer.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{MeasureConfig, MeasureKind};
+use crate::coordinator::factory::build_measure;
+use crate::cp::measure::CpMeasure;
+use crate::cp::pvalue::p_value;
+use crate::data::{Dataset, Label};
+use crate::linalg::engine::Engine;
+
+/// One deployed conformal predictor.
+pub struct Deployment {
+    pub name: String,
+    pub kind: MeasureKind,
+    measure: Box<dyn CpMeasure>,
+    n_labels: usize,
+    /// monotone version, bumped by online updates
+    pub version: u64,
+}
+
+impl Deployment {
+    pub fn train(
+        name: &str,
+        kind: MeasureKind,
+        cfg: &MeasureConfig,
+        ds: &Dataset,
+        engine: Option<Engine>,
+    ) -> Self {
+        let mut measure = build_measure(kind, cfg, engine);
+        measure.fit(ds);
+        Deployment {
+            name: name.to_string(),
+            kind,
+            measure,
+            n_labels: ds.n_labels,
+            version: 0,
+        }
+    }
+
+    pub fn p_values(&self, x: &[f64]) -> Vec<f64> {
+        (0..self.n_labels)
+            .map(|y| p_value(&self.measure.scores(x, y)))
+            .collect()
+    }
+
+    pub fn predict_set(&self, x: &[f64], eps: f64) -> Vec<Label> {
+        self.p_values(x)
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p > eps)
+            .map(|(y, _)| y)
+            .collect()
+    }
+
+    /// Online increment; Err if the measure cannot update in place.
+    pub fn learn(&mut self, x: &[f64], y: Label) -> Result<()> {
+        if self.measure.learn(x, y) {
+            self.version += 1;
+            Ok(())
+        } else {
+            bail!("measure {} does not support online learn", self.measure.name())
+        }
+    }
+
+    /// Online decrement by training index.
+    pub fn unlearn(&mut self, idx: usize) -> Result<()> {
+        if self.measure.unlearn(idx) {
+            self.version += 1;
+            Ok(())
+        } else {
+            bail!("measure {} does not support online unlearn", self.measure.name())
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.measure.n()
+    }
+
+    pub fn measure_name(&self) -> String {
+        self.measure.name()
+    }
+}
+
+/// Thread-safe registry of deployments.
+#[derive(Default)]
+pub struct Registry {
+    inner: RwLock<HashMap<String, Deployment>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&self, d: Deployment) {
+        self.inner.write().unwrap().insert(d.name.clone(), d);
+    }
+
+    pub fn remove(&self, name: &str) -> bool {
+        self.inner.write().unwrap().remove(name).is_some()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.inner.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Run `f` against a deployment under the read lock.
+    pub fn with<R>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&Deployment) -> R,
+    ) -> Result<R> {
+        let guard = self.inner.read().unwrap();
+        let d = guard
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown deployment {name:?}"))?;
+        Ok(f(d))
+    }
+
+    /// Run `f` against a deployment under the write lock (online updates).
+    pub fn with_mut<R>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&mut Deployment) -> R,
+    ) -> Result<R> {
+        let mut guard = self.inner.write().unwrap();
+        let d = guard
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("unknown deployment {name:?}"))?;
+        Ok(f(d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{make_classification, ClassificationSpec};
+
+    fn ds(n: usize, seed: u64) -> Dataset {
+        make_classification(
+            &ClassificationSpec {
+                n_samples: n,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn deployment_predicts_and_updates() {
+        let d = ds(40, 1);
+        let mut dep = Deployment::train(
+            "knn",
+            MeasureKind::SimplifiedKnn,
+            &MeasureConfig {
+                k: 3,
+                ..Default::default()
+            },
+            &d,
+            None,
+        );
+        let ps = dep.p_values(d.row(0));
+        assert_eq!(ps.len(), 2);
+        assert_eq!(dep.n_train(), 40);
+        dep.learn(&vec![0.0; 30], 1).unwrap();
+        assert_eq!(dep.n_train(), 41);
+        assert_eq!(dep.version, 1);
+        dep.unlearn(40).unwrap();
+        assert_eq!(dep.n_train(), 40);
+    }
+
+    #[test]
+    fn registry_routing() {
+        let reg = Registry::new();
+        let d = ds(20, 2);
+        let cfg = MeasureConfig {
+            k: 3,
+            ..Default::default()
+        };
+        reg.insert(Deployment::train(
+            "a",
+            MeasureKind::SimplifiedKnn,
+            &cfg,
+            &d,
+            None,
+        ));
+        reg.insert(Deployment::train("b", MeasureKind::Kde, &cfg, &d, None));
+        assert_eq!(reg.names(), vec!["a", "b"]);
+        let n = reg.with("a", |dep| dep.n_train()).unwrap();
+        assert_eq!(n, 20);
+        assert!(reg.with("missing", |_| ()).is_err());
+        assert!(reg.remove("b"));
+        assert_eq!(reg.names(), vec!["a"]);
+    }
+}

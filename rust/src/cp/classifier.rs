@@ -1,0 +1,153 @@
+//! Full (transductive) conformal classifier — Algorithm 1 of the paper,
+//! generic over the nonconformity measure.
+
+use crate::cp::measure::CpMeasure;
+use crate::cp::pvalue::p_value;
+use crate::data::{Dataset, Label};
+
+/// A full CP classifier wrapping a [`CpMeasure`].
+///
+/// For a test object x it computes one p-value per candidate label by
+/// running the measure's LOO scoring (Algorithm 1), and emits the
+/// prediction set Gamma^eps = { y : p_(x,y) > eps }, which contains the
+/// true label with probability >= 1 - eps under exchangeability.
+pub struct FullCp<M: CpMeasure> {
+    measure: M,
+    n_labels: usize,
+}
+
+/// Forced (point) prediction with its confidence/credibility pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ForcedPrediction {
+    /// argmax-p label
+    pub label: Label,
+    /// largest p-value — low credibility flags an outlier test object
+    pub credibility: f64,
+    /// 1 - (second largest p-value)
+    pub confidence: f64,
+}
+
+impl<M: CpMeasure> FullCp<M> {
+    /// Fit the measure on the training set. For optimized measures this
+    /// runs the paper's precomputation (Table 1 "Train" column); for
+    /// standard measures it is O(1) bookkeeping.
+    pub fn train(mut measure: M, ds: &Dataset) -> Self {
+        measure.fit(ds);
+        FullCp {
+            measure,
+            n_labels: ds.n_labels,
+        }
+    }
+
+    /// One conformal p-value per label, in label order.
+    pub fn p_values(&self, x: &[f64]) -> Vec<f64> {
+        (0..self.n_labels)
+            .map(|y| p_value(&self.measure.scores(x, y)))
+            .collect()
+    }
+
+    /// p-value for a single (x, y) pairing.
+    pub fn p_value_for(&self, x: &[f64], y: Label) -> f64 {
+        p_value(&self.measure.scores(x, y))
+    }
+
+    /// The prediction set Gamma^eps.
+    pub fn predict_set(&self, x: &[f64], eps: f64) -> Vec<Label> {
+        self.p_values(x)
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p > eps)
+            .map(|(y, _)| y)
+            .collect()
+    }
+
+    /// Forced point prediction + credibility/confidence.
+    pub fn forced(&self, x: &[f64]) -> ForcedPrediction {
+        let ps = self.p_values(x);
+        let (mut best, mut second) = ((0usize, f64::MIN), f64::MIN);
+        for (y, &p) in ps.iter().enumerate() {
+            if p > best.1 {
+                second = best.1;
+                best = (y, p);
+            } else if p > second {
+                second = p;
+            }
+        }
+        ForcedPrediction {
+            label: best.0,
+            credibility: best.1,
+            confidence: 1.0 - second.max(0.0),
+        }
+    }
+
+    /// Access the wrapped measure (online updates, diagnostics).
+    pub fn measure(&self) -> &M {
+        &self.measure
+    }
+
+    pub fn measure_mut(&mut self) -> &mut M {
+        &mut self.measure
+    }
+
+    pub fn n_labels(&self) -> usize {
+        self.n_labels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::measure::Scores;
+
+    /// Measure where label 0 always conforms and label 1 never does.
+    struct Rigged {
+        n: usize,
+    }
+    impl CpMeasure for Rigged {
+        fn name(&self) -> String {
+            "rigged".into()
+        }
+        fn fit(&mut self, ds: &Dataset) {
+            self.n = ds.n();
+        }
+        fn scores(&self, _x: &[f64], y: Label) -> Scores {
+            let test = if y == 0 { 0.0 } else { 100.0 };
+            Scores {
+                train: (0..self.n).map(|i| i as f64).collect(),
+                test,
+            }
+        }
+        fn n(&self) -> usize {
+            self.n
+        }
+        fn n_labels(&self) -> usize {
+            2
+        }
+    }
+
+    fn toy() -> Dataset {
+        Dataset::new(vec![0.0; 8], vec![0, 0, 1, 1], 2, 2)
+    }
+
+    #[test]
+    fn prediction_set_filters_by_eps() {
+        let cp = FullCp::train(Rigged { n: 0 }, &toy());
+        let ps = cp.p_values(&[0.0, 0.0]);
+        assert_eq!(ps[0], 1.0); // all alphas >= 0
+        assert_eq!(ps[1], 1.0 / 5.0); // none >= 100
+        assert_eq!(cp.predict_set(&[0.0, 0.0], 0.3), vec![0]);
+        assert_eq!(cp.predict_set(&[0.0, 0.0], 0.1), vec![0, 1]);
+        // p-values cap at 1.0, so the most confident label survives any
+        // eps < 1
+        assert_eq!(cp.predict_set(&[0.0, 0.0], 0.999), vec![0]);
+    }
+
+    #[test]
+    fn forced_prediction_fields() {
+        let cp = FullCp::train(Rigged { n: 0 }, &toy());
+        let f = cp.forced(&[0.0, 0.0]);
+        assert_eq!(f.label, 0);
+        assert_eq!(f.credibility, 1.0);
+        assert!((f.confidence - (1.0 - 0.2)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,232 @@
+//! Cross-conformal prediction (Vovk 2015) and Aggregated CP (Carlsson
+//! et al. 2014) — the remaining rows of the paper's App. A complexity
+//! table. Both sit between ICP (fastest, weakest) and full CP (the
+//! paper's optimized target): K ICP-like folds whose p-value evidence
+//! is pooled.
+//!
+//! * Cross-CP: K-fold split; fold k's measure is trained on the other
+//!   K-1 folds and scores fold k as calibration; the p-value pools the
+//!   rank counts across all folds.
+//! * Aggregated CP: K independent random proper/calibration splits;
+//!   the per-split ICP p-values are averaged.
+//!
+//! Complexities (App. A): train O((T_A((K-1)n/K) + P_A(n/K))K); predict
+//! O((P_A(1) + n/K)K l m).
+
+use crate::cp::icp::IcpMeasure;
+use crate::data::{Dataset, Label, Rng};
+
+/// Cross-conformal predictor over a measure factory (one fresh measure
+/// per fold).
+pub struct CrossCp<M: IcpMeasure> {
+    folds: Vec<FoldState<M>>,
+    n_labels: usize,
+}
+
+struct FoldState<M> {
+    measure: M,
+    /// calibration scores of this fold's held-out examples, sorted
+    calib: Vec<f64>,
+}
+
+impl<M: IcpMeasure> CrossCp<M> {
+    /// Train with `k_folds` folds; `make_measure` builds one fresh
+    /// measure per fold.
+    pub fn train(
+        ds: &Dataset,
+        k_folds: usize,
+        seed: u64,
+        mut make_measure: impl FnMut() -> M,
+    ) -> Self {
+        assert!(k_folds >= 2 && k_folds <= ds.n());
+        let mut idx: Vec<usize> = (0..ds.n()).collect();
+        let mut rng = Rng::seed_from(seed);
+        rng.shuffle(&mut idx);
+        let mut folds = Vec::with_capacity(k_folds);
+        for k in 0..k_folds {
+            let held: Vec<usize> = idx
+                .iter()
+                .copied()
+                .skip(k)
+                .step_by(k_folds)
+                .collect();
+            let rest: Vec<usize> = idx
+                .iter()
+                .copied()
+                .filter(|i| !held.contains(i))
+                .collect();
+            let mut measure = make_measure();
+            measure.fit(&ds.subset(&rest));
+            let mut calib: Vec<f64> = held
+                .iter()
+                .map(|&i| measure.score(ds.row(i), ds.y[i]))
+                .collect();
+            calib.sort_unstable_by(|a, b| a.total_cmp(b));
+            folds.push(FoldState { measure, calib });
+        }
+        CrossCp {
+            folds,
+            n_labels: ds.n_labels,
+        }
+    }
+
+    /// Cross-conformal p-value: pooled rank count across folds,
+    /// p = (sum_k #{alpha in calib_k : alpha >= alpha_k(x,y)} + 1) / (n + 1).
+    pub fn p_value_for(&self, x: &[f64], y: Label) -> f64 {
+        let mut ge = 0usize;
+        let mut n = 0usize;
+        for fold in &self.folds {
+            let alpha = fold.measure.score(x, y);
+            let idx = fold.calib.partition_point(|&a| a < alpha);
+            ge += fold.calib.len() - idx;
+            n += fold.calib.len();
+        }
+        (ge + 1) as f64 / (n + 1) as f64
+    }
+
+    pub fn p_values(&self, x: &[f64]) -> Vec<f64> {
+        (0..self.n_labels)
+            .map(|y| self.p_value_for(x, y))
+            .collect()
+    }
+
+    pub fn predict_set(&self, x: &[f64], eps: f64) -> Vec<Label> {
+        self.p_values(x)
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p > eps)
+            .map(|(y, _)| y)
+            .collect()
+    }
+}
+
+/// Aggregated conformal predictor: average of K independent ICP
+/// p-values over random splits.
+pub struct AggregatedCp<M: IcpMeasure> {
+    splits: Vec<FoldState<M>>,
+    n_labels: usize,
+}
+
+impl<M: IcpMeasure> AggregatedCp<M> {
+    /// `t` = proper-training size per split.
+    pub fn train(
+        ds: &Dataset,
+        k_splits: usize,
+        t: usize,
+        seed: u64,
+        mut make_measure: impl FnMut() -> M,
+    ) -> Self {
+        assert!(k_splits >= 1 && t >= 1 && t < ds.n());
+        let mut rng = Rng::seed_from(seed);
+        let mut splits = Vec::with_capacity(k_splits);
+        for _ in 0..k_splits {
+            let mut idx: Vec<usize> = (0..ds.n()).collect();
+            rng.shuffle(&mut idx);
+            let mut measure = make_measure();
+            measure.fit(&ds.subset(&idx[..t]));
+            let mut calib: Vec<f64> = idx[t..]
+                .iter()
+                .map(|&i| measure.score(ds.row(i), ds.y[i]))
+                .collect();
+            calib.sort_unstable_by(|a, b| a.total_cmp(b));
+            splits.push(FoldState { measure, calib });
+        }
+        AggregatedCp {
+            splits,
+            n_labels: ds.n_labels,
+        }
+    }
+
+    /// Mean of the per-split ICP p-values.
+    pub fn p_value_for(&self, x: &[f64], y: Label) -> f64 {
+        let mut sum = 0.0;
+        for s in &self.splits {
+            let alpha = s.measure.score(x, y);
+            let idx = s.calib.partition_point(|&a| a < alpha);
+            let ge = s.calib.len() - idx;
+            sum += (ge + 1) as f64 / (s.calib.len() + 1) as f64;
+        }
+        sum / self.splits.len() as f64
+    }
+
+    pub fn p_values(&self, x: &[f64]) -> Vec<f64> {
+        (0..self.n_labels)
+            .map(|y| self.p_value_for(x, y))
+            .collect()
+    }
+
+    pub fn predict_set(&self, x: &[f64], eps: f64) -> Vec<Label> {
+        self.p_values(x)
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p > eps)
+            .map(|(y, _)| y)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::metrics::coverage;
+    use crate::data::{make_classification, ClassificationSpec};
+    use crate::measures::IcpKnn;
+
+    fn data(n: usize, seed: u64) -> Dataset {
+        make_classification(
+            &ClassificationSpec {
+                n_samples: n,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn cross_cp_valid_coverage() {
+        let all = data(300, 1);
+        let mut rng = Rng::seed_from(2);
+        let (train, test) = all.split(220, &mut rng);
+        let cp = CrossCp::train(&train, 5, 3, || IcpKnn::new(5, true));
+        let pm: Vec<Vec<f64>> =
+            (0..test.n()).map(|i| cp.p_values(test.row(i))).collect();
+        for eps in [0.1, 0.2] {
+            let cov = coverage(&pm, &test.y, eps);
+            assert!(cov >= 1.0 - eps - 0.13, "eps={eps}: {cov}");
+        }
+    }
+
+    #[test]
+    fn aggregated_cp_valid_coverage() {
+        let all = data(300, 4);
+        let mut rng = Rng::seed_from(5);
+        let (train, test) = all.split(220, &mut rng);
+        let cp = AggregatedCp::train(&train, 4, 110, 6, || IcpKnn::new(5, true));
+        let pm: Vec<Vec<f64>> =
+            (0..test.n()).map(|i| cp.p_values(test.row(i))).collect();
+        // aggregated CP's guarantee is approximate; allow extra slack
+        let cov = coverage(&pm, &test.y, 0.1);
+        assert!(cov >= 0.75, "coverage {cov}");
+    }
+
+    #[test]
+    fn folds_partition_data() {
+        let train = data(50, 7);
+        let cp = CrossCp::train(&train, 5, 8, || IcpKnn::new(3, true));
+        let total: usize = cp.folds.iter().map(|f| f.calib.len()).sum();
+        assert_eq!(total, 50, "every example is calibration exactly once");
+    }
+
+    #[test]
+    fn pvalues_discriminate() {
+        let train = data(120, 9);
+        let cp = CrossCp::train(&train, 4, 10, || IcpKnn::new(5, true));
+        // training points should get higher p for their own label
+        let (mut own, mut other) = (0.0, 0.0);
+        for i in 0..20 {
+            own += cp.p_value_for(train.row(i), train.y[i]);
+            other += cp.p_value_for(train.row(i), 1 - train.y[i]);
+        }
+        assert!(own > other, "{own} vs {other}");
+    }
+}

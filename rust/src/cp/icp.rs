@@ -1,0 +1,126 @@
+//! Inductive Conformal Prediction — Algorithm 2 (App. A).
+//!
+//! The paper's computational baseline: train the measure once on a
+//! proper-training subset, score the calibration remainder, and compute
+//! each test p-value against the *sorted* calibration scores (binary
+//! search — an implementation detail the paper's O(n - t) bound allows
+//! us to beat; it does not change who wins).
+
+use crate::data::{Dataset, Label};
+
+/// A measure usable inductively: fit on the proper training set, then
+/// score arbitrary examples against it.
+pub trait IcpMeasure: Send {
+    fn name(&self) -> String;
+    fn fit(&mut self, proper: &Dataset);
+    /// alpha = A((x, y); Z_train)
+    fn score(&self, x: &[f64], y: Label) -> f64;
+}
+
+/// Inductive CP classifier.
+pub struct Icp<M: IcpMeasure> {
+    measure: M,
+    /// calibration scores, sorted ascending
+    calib: Vec<f64>,
+    n_labels: usize,
+}
+
+impl<M: IcpMeasure> Icp<M> {
+    /// CALIBRATE(): split at `t`, fit on the proper training set, score
+    /// the calibration set under true labels.
+    pub fn calibrate(mut measure: M, ds: &Dataset, t: usize) -> Self {
+        assert!(t >= 1 && t < ds.n(), "need 1 <= t < n");
+        let (proper, calib_set) = ds.split_at(t);
+        measure.fit(&proper);
+        let mut calib: Vec<f64> = (0..calib_set.n())
+            .map(|i| measure.score(calib_set.row(i), calib_set.y[i]))
+            .collect();
+        calib.sort_unstable_by(|a, b| a.total_cmp(b));
+        Icp {
+            measure,
+            calib,
+            n_labels: ds.n_labels,
+        }
+    }
+
+    /// COMPUTE_PVALUE(): p = (#{alpha_i >= alpha} + 1) / (c + 1).
+    pub fn p_value_for(&self, x: &[f64], y: Label) -> f64 {
+        let alpha = self.measure.score(x, y);
+        // first index with calib[idx] >= alpha
+        let idx = self.calib.partition_point(|&a| a < alpha);
+        let ge = self.calib.len() - idx;
+        (ge + 1) as f64 / (self.calib.len() + 1) as f64
+    }
+
+    pub fn p_values(&self, x: &[f64]) -> Vec<f64> {
+        (0..self.n_labels)
+            .map(|y| self.p_value_for(x, y))
+            .collect()
+    }
+
+    pub fn predict_set(&self, x: &[f64], eps: f64) -> Vec<Label> {
+        self.p_values(x)
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p > eps)
+            .map(|(y, _)| y)
+            .collect()
+    }
+
+    pub fn calibration_size(&self) -> usize {
+        self.calib.len()
+    }
+
+    pub fn measure(&self) -> &M {
+        &self.measure
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// alpha = |x0 - y| : label 0 conforms near 0, label 1 near 1.
+    struct Toy;
+    impl IcpMeasure for Toy {
+        fn name(&self) -> String {
+            "toy".into()
+        }
+        fn fit(&mut self, _proper: &Dataset) {}
+        fn score(&self, x: &[f64], y: Label) -> f64 {
+            (x[0] - y as f64).abs()
+        }
+    }
+
+    fn ds() -> Dataset {
+        // 6 pts: x0 = label +- 0.1
+        let x = vec![0.1, -0.1, 0.9, 1.1, 0.05, 0.95];
+        let y = vec![0, 0, 1, 1, 0, 1];
+        Dataset::new(x, y, 1, 2)
+    }
+
+    #[test]
+    fn calibration_and_pvalues() {
+        let icp = Icp::calibrate(Toy, &ds(), 2);
+        assert_eq!(icp.calibration_size(), 4);
+        // a clean label-0 point: alpha=0, all 4 calib scores >= 0
+        let p0 = icp.p_value_for(&[0.0], 0);
+        assert_eq!(p0, 1.0);
+        // absurd point: alpha large, nothing >=
+        let p1 = icp.p_value_for(&[5.0], 0);
+        assert_eq!(p1, 1.0 / 5.0);
+    }
+
+    #[test]
+    fn prediction_set_behaviour() {
+        let icp = Icp::calibrate(Toy, &ds(), 2);
+        let set = icp.predict_set(&[0.02], 0.3);
+        assert_eq!(set, vec![0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_degenerate_split() {
+        let _ = Icp::calibrate(Toy, &ds(), 6);
+    }
+}

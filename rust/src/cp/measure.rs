@@ -1,0 +1,97 @@
+//! Nonconformity-measure traits.
+
+use crate::data::{Dataset, Label};
+
+/// The n+1 nonconformity scores full CP needs for one (test object,
+/// candidate label) pair — Algorithm 1's LOO loop output.
+///
+/// `train[i]` is alpha_i = A((x_i, y_i); {(x, y)} u Z \ {(x_i, y_i)})
+/// and `test` is alpha = A((x, y); Z).
+#[derive(Clone, Debug)]
+pub struct Scores {
+    pub train: Vec<f64>,
+    pub test: f64,
+}
+
+/// A nonconformity measure usable by the full CP classifier.
+///
+/// Implementations come in two flavours with identical outputs:
+///
+/// * **standard** — `fit` stores the training set; `scores` reruns the
+///   measure from scratch for every LOO bag (the paper's baseline
+///   complexity, Table 1 "Standard");
+/// * **optimized** — `fit` does the paper's incremental&decremental
+///   precomputation (provisional scores, k-best structures, model +
+///   auxiliary matrix, ...); `scores` applies O(1)/O(q^2) updates
+///   (Table 1 "Optimized").
+///
+/// The exactness contract — optimized `scores` == standard `scores` up to
+/// float round-off — is enforced by `rust/tests/exactness.rs` and the
+/// proptest suite.
+///
+/// `Send + Sync` so deployments can sit behind the coordinator's RwLock
+/// and be scored from a worker pool (`scores` takes `&self`).
+pub trait CpMeasure: Send + Sync {
+    /// Human-readable measure name (used by the CLI, benches, reports).
+    fn name(&self) -> String;
+
+    /// Train/precompute on the training bag.
+    fn fit(&mut self, ds: &Dataset);
+
+    /// Nonconformity scores for candidate-labelled test example (x, y).
+    fn scores(&self, x: &[f64], y: Label) -> Scores;
+
+    /// Number of training examples currently fitted.
+    fn n(&self) -> usize;
+
+    /// Labels of the fitted training set.
+    fn n_labels(&self) -> usize;
+
+    /// Incrementally learn one example (online setting, §9). Returns
+    /// false when the measure does not support online updates (standard
+    /// variants refit instead).
+    fn learn(&mut self, _x: &[f64], _y: Label) -> bool {
+        false
+    }
+
+    /// Decrementally unlearn the example at training index `idx`.
+    fn unlearn(&mut self, _idx: usize) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Dummy {
+        n: usize,
+    }
+    impl CpMeasure for Dummy {
+        fn name(&self) -> String {
+            "dummy".into()
+        }
+        fn fit(&mut self, ds: &Dataset) {
+            self.n = ds.n();
+        }
+        fn scores(&self, _x: &[f64], _y: Label) -> Scores {
+            Scores {
+                train: vec![0.0; self.n],
+                test: 0.0,
+            }
+        }
+        fn n(&self) -> usize {
+            self.n
+        }
+        fn n_labels(&self) -> usize {
+            2
+        }
+    }
+
+    #[test]
+    fn default_online_hooks_decline() {
+        let mut d = Dummy { n: 0 };
+        assert!(!d.learn(&[0.0], 0));
+        assert!(!d.unlearn(0));
+    }
+}

@@ -1,0 +1,243 @@
+//! Validity / efficiency metrics (App. G).
+//!
+//! - empirical coverage and average prediction-set size at a given eps;
+//! - *fuzziness* (Vovk et al. 2016): sum of a test point's p-values
+//!   minus the largest — smaller is statistically more efficient;
+//! - Welch's one-sided t-test, used by the paper to show full CP has
+//!   significantly smaller fuzziness than ICP on MNIST.
+
+/// Empirical coverage: fraction of test points whose true label is in
+/// the prediction set at significance `eps`.
+pub fn coverage(p_matrix: &[Vec<f64>], truth: &[usize], eps: f64) -> f64 {
+    assert_eq!(p_matrix.len(), truth.len());
+    let hits = p_matrix
+        .iter()
+        .zip(truth)
+        .filter(|(ps, &y)| ps[y] > eps)
+        .count();
+    hits as f64 / truth.len() as f64
+}
+
+/// Average prediction-set size at significance `eps`.
+pub fn avg_set_size(p_matrix: &[Vec<f64>], eps: f64) -> f64 {
+    let total: usize = p_matrix
+        .iter()
+        .map(|ps| ps.iter().filter(|&&p| p > eps).count())
+        .sum();
+    total as f64 / p_matrix.len() as f64
+}
+
+/// Fuzziness of one test point's p-values: sum minus max.
+pub fn fuzziness(ps: &[f64]) -> f64 {
+    let sum: f64 = ps.iter().sum();
+    let max = ps.iter().cloned().fold(f64::MIN, f64::max);
+    sum - max
+}
+
+/// Mean and (sample) std of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// Welch's one-sided t-test for H0: mean(a) >= mean(b) (i.e. the
+/// alternative is "a has *smaller* mean than b"). Returns (t, p).
+///
+/// App. G usage: a = CP fuzziness, b = ICP fuzziness; small p rejects
+/// "ICP is better", i.e. CP is significantly more efficient.
+pub fn welch_one_sided(a: &[f64], b: &[f64]) -> (f64, f64) {
+    let (ma, sa) = mean_std(a);
+    let (mb, sb) = mean_std(b);
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let va = sa * sa / na;
+    let vb = sb * sb / nb;
+    let se = (va + vb).sqrt();
+    if se == 0.0 {
+        // degenerate zero-variance samples: decide by the means alone
+        return match ma.partial_cmp(&mb) {
+            Some(std::cmp::Ordering::Less) => (f64::NEG_INFINITY, 0.0),
+            Some(std::cmp::Ordering::Greater) => (f64::INFINITY, 1.0),
+            _ => (0.0, 0.5),
+        };
+    }
+    let t = (ma - mb) / se;
+    // Welch–Satterthwaite degrees of freedom
+    let df = (va + vb).powi(2)
+        / (va * va / (na - 1.0).max(1.0) + vb * vb / (nb - 1.0).max(1.0));
+    // one-sided p = P(T_df <= t)
+    let p = student_t_cdf(t, df);
+    (t, p)
+}
+
+/// Student-t CDF via the regularized incomplete beta function.
+pub fn student_t_cdf(t: f64, df: f64) -> f64 {
+    if !t.is_finite() {
+        return if t > 0.0 { 1.0 } else { 0.0 };
+    }
+    let x = df / (df + t * t);
+    let ib = 0.5 * reg_inc_beta(0.5 * df, 0.5, x);
+    if t >= 0.0 {
+        1.0 - ib
+    } else {
+        ib
+    }
+}
+
+/// Regularized incomplete beta I_x(a, b) via Lentz continued fraction.
+pub fn reg_inc_beta(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_beta = ln_gamma(a) + ln_gamma(b) - ln_gamma(a + b);
+    // front = x^a (1-x)^b / B(a,b) — symmetric under (a,b,x)<->(b,a,1-x)
+    let front = (a * x.ln() + b * (1.0 - x).ln() - ln_beta).exp();
+    // Pick whichever continued fraction converges fast (no recursion:
+    // the symmetric branch is computed directly to avoid the x == 0.5
+    // fixed point).
+    if x <= (a + 1.0) / (a + b + 2.0) {
+        front * beta_cf(a, b, x) / a
+    } else {
+        1.0 - front * beta_cf(b, a, 1.0 - x) / b
+    }
+}
+
+fn beta_cf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_ITER: usize = 300;
+    const EPS: f64 = 1e-14;
+    const TINY: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < TINY {
+        d = TINY;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_ITER {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        // even step
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        // odd step
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Lanczos log-gamma.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        return (std::f64::consts::PI / (std::f64::consts::PI * x).sin()).ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = G[0];
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        acc += g / (x + i as f64);
+    }
+    let t = x + 7.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coverage_and_size() {
+        let pm = vec![vec![0.9, 0.05], vec![0.2, 0.8], vec![0.04, 0.9]];
+        let truth = vec![0, 1, 0];
+        assert!((coverage(&pm, &truth, 0.05) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((avg_set_size(&pm, 0.1) - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fuzziness_examples() {
+        assert!((fuzziness(&[1.0, 0.2, 0.1]) - 0.3).abs() < 1e-12);
+        assert_eq!(fuzziness(&[0.5]), 0.0);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Gamma(5) = 24
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        // Gamma(0.5) = sqrt(pi)
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn t_cdf_reference_points() {
+        // symmetric
+        assert!((student_t_cdf(0.0, 7.0) - 0.5).abs() < 1e-12);
+        // t=1.96, df=large -> ~0.975
+        assert!((student_t_cdf(1.96, 1e6) - 0.975).abs() < 1e-3);
+        // t distribution df=1 (Cauchy): CDF(1) = 0.75
+        assert!((student_t_cdf(1.0, 1.0) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welch_detects_shift() {
+        // a clearly below b
+        let a: Vec<f64> = (0..200).map(|i| (i % 10) as f64 * 0.01).collect();
+        let b: Vec<f64> = (0..200).map(|i| 1.0 + (i % 10) as f64 * 0.01).collect();
+        let (t, p) = welch_one_sided(&a, &b);
+        assert!(t < -10.0);
+        assert!(p < 1e-6, "p = {p}");
+        // and the reverse is not significant
+        let (_, p_rev) = welch_one_sided(&b, &a);
+        assert!(p_rev > 0.99);
+    }
+
+    #[test]
+    fn welch_null_is_moderate() {
+        let a: Vec<f64> = (0..100).map(|i| (i as f64 * 0.37).sin()).collect();
+        let (_, p) = welch_one_sided(&a, &a);
+        assert!((p - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,24 @@
+//! Conformal prediction core (paper §2).
+//!
+//! - [`measure`] — the nonconformity-measure traits. The key design
+//!   point (paper §3.1): a measure that can *learn* and *unlearn* one
+//!   example efficiently turns full CP's LOO loop from
+//!   O(T_A(n) + P_A(1)) per training point into O(1) amortized.
+//! - [`pvalue`] — plain and smoothed conformal p-values.
+//! - [`classifier`] — the full (transductive) CP classifier, Algorithm 1.
+//! - [`icp`] — Inductive CP, Algorithm 2 (the computational baseline).
+//! - [`metrics`] — validity/efficiency metrics: coverage, set size,
+//!   fuzziness (Vovk et al. 2016), Welch's one-sided t-test (App. G).
+
+pub mod classifier;
+pub mod crosscp;
+pub mod icp;
+pub mod measure;
+pub mod metrics;
+pub mod pvalue;
+
+pub use classifier::FullCp;
+pub use crosscp::{AggregatedCp, CrossCp};
+pub use icp::{Icp, IcpMeasure};
+pub use measure::{CpMeasure, Scores};
+pub use pvalue::{p_value, smoothed_p_value};

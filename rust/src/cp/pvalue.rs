@@ -1,0 +1,81 @@
+//! Conformal p-values.
+
+use crate::cp::measure::Scores;
+
+/// Plain conformal p-value (Algorithm 1, line 5):
+/// p = (#{i : alpha_i >= alpha} + 1) / (n + 1).
+///
+/// The "+1" in the numerator counts the test example itself
+/// (alpha >= alpha trivially), making p uniform over
+/// {1/(n+1), ..., 1} under exchangeability.
+pub fn p_value(s: &Scores) -> f64 {
+    let ge = s.train.iter().filter(|&&a| a >= s.test).count();
+    (ge + 1) as f64 / (s.train.len() + 1) as f64
+}
+
+/// Smoothed conformal p-value:
+/// p = (#{alpha_i > alpha} + tau * (#{alpha_i == alpha} + 1)) / (n + 1)
+/// with tau ~ U[0,1]. Exactly uniform under exchangeability — required
+/// by the exchangeability martingales of the online IID test (§9).
+pub fn smoothed_p_value(s: &Scores, tau: f64) -> f64 {
+    let mut gt = 0usize;
+    let mut eq = 0usize;
+    for &a in &s.train {
+        if a > s.test {
+            gt += 1;
+        } else if a == s.test {
+            eq += 1;
+        }
+    }
+    (gt as f64 + tau * (eq + 1) as f64) / (s.train.len() + 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scores(train: Vec<f64>, test: f64) -> Scores {
+        Scores { train, test }
+    }
+
+    #[test]
+    fn p_value_counts_ge() {
+        // train scores 1..4, test 2.5 -> two >= -> (2+1)/5
+        let s = scores(vec![1.0, 2.0, 3.0, 4.0], 2.5);
+        assert_eq!(p_value(&s), 3.0 / 5.0);
+    }
+
+    #[test]
+    fn p_value_extremes() {
+        let s = scores(vec![1.0, 2.0, 3.0], 10.0);
+        assert_eq!(p_value(&s), 1.0 / 4.0); // most nonconforming
+        let s = scores(vec![1.0, 2.0, 3.0], 0.0);
+        assert_eq!(p_value(&s), 1.0); // most conforming
+    }
+
+    #[test]
+    fn p_value_handles_infinities() {
+        let s = scores(vec![f64::INFINITY, 1.0], f64::INFINITY);
+        // inf >= inf counts
+        assert_eq!(p_value(&s), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn smoothed_brackets_plain() {
+        let s = scores(vec![1.0, 2.0, 2.0, 3.0], 2.0);
+        let lo = smoothed_p_value(&s, 0.0);
+        let hi = smoothed_p_value(&s, 1.0);
+        let plain = p_value(&s);
+        assert!(lo <= plain && plain <= hi, "{lo} {plain} {hi}");
+        assert_eq!(hi, plain); // tau=1 recovers the plain p-value
+    }
+
+    #[test]
+    fn smoothed_is_linear_in_tau() {
+        let s = scores(vec![1.0, 2.0, 2.0, 3.0], 2.0);
+        let a = smoothed_p_value(&s, 0.25);
+        let b = smoothed_p_value(&s, 0.75);
+        let mid = smoothed_p_value(&s, 0.5);
+        assert!((mid - (a + b) / 2.0).abs() < 1e-12);
+    }
+}

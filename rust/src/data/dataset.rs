@@ -1,0 +1,213 @@
+//! Dataset container: flat row-major feature matrix + labels/targets.
+//!
+//! Flat storage (one `Vec<f64>`, row-major) keeps the hot loops
+//! allocation-free and cache-friendly, and marshals to PJRT literals
+//! without copies of structure.
+
+use crate::data::rng::Rng;
+
+/// Classification label (0-based class index).
+pub type Label = usize;
+
+/// A classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major `n x p` feature matrix.
+    pub x: Vec<f64>,
+    /// `n` class labels in `0..n_labels`.
+    pub y: Vec<Label>,
+    /// Feature dimensionality.
+    pub p: usize,
+    /// Number of distinct labels.
+    pub n_labels: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f64>, y: Vec<Label>, p: usize, n_labels: usize) -> Self {
+        assert_eq!(x.len(), y.len() * p, "feature matrix shape mismatch");
+        debug_assert!(y.iter().all(|&l| l < n_labels));
+        Dataset { x, y, p, n_labels }
+    }
+
+    /// Number of examples.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    /// The `i`-th feature row.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.p..(i + 1) * self.p]
+    }
+
+    /// Count of examples per label.
+    pub fn label_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.n_labels];
+        for &l in &self.y {
+            c[l] += 1;
+        }
+        c
+    }
+
+    /// Append one example (used by the online coordinator path).
+    pub fn push(&mut self, x: &[f64], y: Label) {
+        assert_eq!(x.len(), self.p);
+        self.x.extend_from_slice(x);
+        self.y.push(y);
+        if y >= self.n_labels {
+            self.n_labels = y + 1;
+        }
+    }
+
+    /// Remove the `i`-th example (swap-remove semantics are NOT used:
+    /// order is preserved because optimized-measure state is indexed).
+    pub fn remove(&mut self, i: usize) -> (Vec<f64>, Label) {
+        let row = self.row(i).to_vec();
+        let label = self.y.remove(i);
+        self.x.drain(i * self.p..(i + 1) * self.p);
+        (row, label)
+    }
+
+    /// Shuffled train/test split with `n_train` training examples.
+    pub fn split(&self, n_train: usize, rng: &mut Rng) -> (Dataset, Dataset) {
+        let n = self.n();
+        assert!(n_train <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let take = |ids: &[usize]| {
+            let mut x = Vec::with_capacity(ids.len() * self.p);
+            let mut y = Vec::with_capacity(ids.len());
+            for &i in ids {
+                x.extend_from_slice(self.row(i));
+                y.push(self.y[i]);
+            }
+            Dataset::new(x, y, self.p, self.n_labels)
+        };
+        (take(&idx[..n_train]), take(&idx[n_train..]))
+    }
+
+    /// First-`t` / rest split (ICP's proper-training / calibration split;
+    /// the caller shuffles first if needed).
+    pub fn split_at(&self, t: usize) -> (Dataset, Dataset) {
+        let idx: Vec<usize> = (0..self.n()).collect();
+        let take = |ids: &[usize]| {
+            let mut x = Vec::with_capacity(ids.len() * self.p);
+            let mut y = Vec::with_capacity(ids.len());
+            for &i in ids {
+                x.extend_from_slice(self.row(i));
+                y.push(self.y[i]);
+            }
+            Dataset::new(x, y, self.p, self.n_labels)
+        };
+        (take(&idx[..t]), take(&idx[t..]))
+    }
+
+    /// Subset by indices (bootstrap samples).
+    pub fn subset(&self, ids: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(ids.len() * self.p);
+        let mut y = Vec::with_capacity(ids.len());
+        for &i in ids {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset::new(x, y, self.p, self.n_labels)
+    }
+}
+
+/// A regression dataset: features + real-valued targets.
+#[derive(Clone, Debug)]
+pub struct RegressionDataset {
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub p: usize,
+}
+
+impl RegressionDataset {
+    pub fn new(x: Vec<f64>, y: Vec<f64>, p: usize) -> Self {
+        assert_eq!(x.len(), y.len() * p);
+        RegressionDataset { x, y, p }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.p..(i + 1) * self.p]
+    }
+
+    pub fn split(
+        &self,
+        n_train: usize,
+        rng: &mut Rng,
+    ) -> (RegressionDataset, RegressionDataset) {
+        let n = self.n();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let take = |ids: &[usize]| {
+            let mut x = Vec::with_capacity(ids.len() * self.p);
+            let mut y = Vec::with_capacity(ids.len());
+            for &i in ids {
+                x.extend_from_slice(self.row(i));
+                y.push(self.y[i]);
+            }
+            RegressionDataset::new(x, y, self.p)
+        };
+        (take(&idx[..n_train]), take(&idx[n_train..]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            vec![0., 0., 1., 1., 2., 2., 3., 3.],
+            vec![0, 1, 0, 1],
+            2,
+            2,
+        )
+    }
+
+    #[test]
+    fn rows_and_counts() {
+        let d = toy();
+        assert_eq!(d.n(), 4);
+        assert_eq!(d.row(2), &[2., 2.]);
+        assert_eq!(d.label_counts(), vec![2, 2]);
+    }
+
+    #[test]
+    fn push_remove_roundtrip() {
+        let mut d = toy();
+        d.push(&[9., 9.], 1);
+        assert_eq!(d.n(), 5);
+        let (row, lab) = d.remove(4);
+        assert_eq!(row, vec![9., 9.]);
+        assert_eq!(lab, 1);
+        assert_eq!(d.n(), 4);
+        assert_eq!(d.row(3), &[3., 3.]);
+    }
+
+    #[test]
+    fn remove_middle_preserves_order() {
+        let mut d = toy();
+        d.remove(1);
+        assert_eq!(d.row(1), &[2., 2.]);
+        assert_eq!(d.y, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy();
+        let mut rng = Rng::seed_from(3);
+        let (tr, te) = d.split(3, &mut rng);
+        assert_eq!(tr.n(), 3);
+        assert_eq!(te.n(), 1);
+        assert_eq!(tr.p, 2);
+    }
+}

@@ -1,0 +1,14 @@
+//! Data substrate: deterministic RNG, dataset containers, and Rust ports
+//! of the paper's workload generators (sklearn `make_classification` /
+//! `make_regression`, MNIST-like).
+
+pub mod dataset;
+pub mod rng;
+pub mod synth;
+
+pub use dataset::{Dataset, Label, RegressionDataset};
+pub use rng::Rng;
+pub use synth::{
+    make_classification, make_regression, mnist_like, ClassificationSpec,
+    RegressionSpec,
+};

@@ -1,0 +1,331 @@
+//! Workload generators — Rust ports of the paper's data sources.
+//!
+//! The paper's experiments use scikit-learn's `make_classification()`
+//! (§7: binary, 30 features) and `make_regression()` (§8), plus MNIST
+//! (App. G). This module reimplements the sklearn constructions and a
+//! deterministic MNIST-like generator (DESIGN.md §5 documents the MNIST
+//! substitution: timing depends on (n, p, l) and fuzziness ordering on
+//! separability, both of which the generator preserves).
+
+use crate::data::dataset::{Dataset, RegressionDataset};
+use crate::data::rng::Rng;
+
+/// Parameters for [`make_classification`]; defaults match sklearn's.
+#[derive(Clone, Debug)]
+pub struct ClassificationSpec {
+    pub n_samples: usize,
+    pub n_features: usize,
+    pub n_informative: usize,
+    pub n_redundant: usize,
+    pub n_classes: usize,
+    pub class_sep: f64,
+    /// fraction of labels randomly flipped (sklearn `flip_y`)
+    pub flip_y: f64,
+}
+
+impl Default for ClassificationSpec {
+    fn default() -> Self {
+        // sklearn defaults, with n_features=30 as in the paper's §7 setup
+        ClassificationSpec {
+            n_samples: 100,
+            n_features: 30,
+            n_informative: 2,
+            n_redundant: 2,
+            n_classes: 2,
+            class_sep: 1.0,
+            flip_y: 0.01,
+        }
+    }
+}
+
+/// Port of sklearn's `make_classification`: class centroids on the
+/// vertices of an `n_informative`-dim hypercube (scaled by `class_sep`),
+/// Gaussian clusters around them, redundant features as random linear
+/// combinations of informative ones, remaining features pure noise,
+/// then global feature shuffle.
+pub fn make_classification(spec: &ClassificationSpec, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from(seed);
+    let ClassificationSpec {
+        n_samples,
+        n_features,
+        n_informative,
+        n_redundant,
+        n_classes,
+        class_sep,
+        flip_y,
+    } = *spec;
+    assert!(n_informative + n_redundant <= n_features);
+    assert!(n_classes >= 2);
+
+    // Hypercube vertex centroids: the binary expansion of the class id,
+    // mapped to {-class_sep, +class_sep}^n_informative.
+    let centroid = |c: usize, j: usize| -> f64 {
+        if (c >> (j % 63)) & 1 == 1 {
+            class_sep
+        } else {
+            -class_sep
+        }
+    };
+
+    // Redundant-feature mixing matrix: n_informative x n_redundant.
+    let mix: Vec<f64> = (0..n_informative * n_redundant)
+        .map(|_| 2.0 * rng.f64() - 1.0)
+        .collect();
+
+    // Column shuffle so informative features are not positionally fixed.
+    let mut cols: Vec<usize> = (0..n_features).collect();
+    rng.shuffle(&mut cols);
+
+    let mut x = vec![0.0; n_samples * n_features];
+    let mut y = Vec::with_capacity(n_samples);
+    let mut info = vec![0.0; n_informative];
+    for i in 0..n_samples {
+        let c = i % n_classes; // balanced classes
+        for (j, v) in info.iter_mut().enumerate() {
+            *v = centroid(c, j) + rng.normal();
+        }
+        let row = &mut x[i * n_features..(i + 1) * n_features];
+        for j in 0..n_features {
+            let src = cols[j];
+            row[j] = if src < n_informative {
+                info[src]
+            } else if src < n_informative + n_redundant {
+                let r = src - n_informative;
+                (0..n_informative)
+                    .map(|k| info[k] * mix[k * n_redundant + r])
+                    .sum()
+            } else {
+                rng.normal()
+            };
+        }
+        let label = if flip_y > 0.0 && rng.f64() < flip_y {
+            rng.below(n_classes)
+        } else {
+            c
+        };
+        y.push(label);
+    }
+    let mut ds = Dataset::new(x, y, n_features, n_classes);
+    // Row shuffle so class order is not systematic.
+    shuffle_rows(&mut ds, &mut rng);
+    ds
+}
+
+fn shuffle_rows(ds: &mut Dataset, rng: &mut Rng) {
+    let n = ds.n();
+    let p = ds.p;
+    for i in (1..n).rev() {
+        let j = rng.below(i + 1);
+        if i != j {
+            ds.y.swap(i, j);
+            for k in 0..p {
+                ds.x.swap(i * p + k, j * p + k);
+            }
+        }
+    }
+}
+
+/// Parameters for [`make_regression`]; defaults match sklearn's with the
+/// paper's p=30.
+#[derive(Clone, Debug)]
+pub struct RegressionSpec {
+    pub n_samples: usize,
+    pub n_features: usize,
+    pub n_informative: usize,
+    pub noise: f64,
+}
+
+impl Default for RegressionSpec {
+    fn default() -> Self {
+        RegressionSpec {
+            n_samples: 100,
+            n_features: 30,
+            n_informative: 10,
+            noise: 0.0,
+        }
+    }
+}
+
+/// Port of sklearn's `make_regression`: standard-normal X, targets a
+/// random sparse linear model (coefficients ~ 100 * U[0,1] on the
+/// informative subspace) plus optional Gaussian noise.
+pub fn make_regression(spec: &RegressionSpec, seed: u64) -> RegressionDataset {
+    let mut rng = Rng::seed_from(seed);
+    let RegressionSpec {
+        n_samples,
+        n_features,
+        n_informative,
+        noise,
+    } = *spec;
+    let coef: Vec<f64> = (0..n_informative).map(|_| 100.0 * rng.f64()).collect();
+    let mut x = vec![0.0; n_samples * n_features];
+    for v in x.iter_mut() {
+        *v = rng.normal();
+    }
+    let mut y = Vec::with_capacity(n_samples);
+    for i in 0..n_samples {
+        let row = &x[i * n_features..(i + 1) * n_features];
+        let mut t: f64 = (0..n_informative).map(|j| row[j] * coef[j]).sum();
+        if noise > 0.0 {
+            t += noise * rng.normal();
+        }
+        y.push(t);
+    }
+    RegressionDataset::new(x, y, n_features)
+}
+
+/// Deterministic MNIST-like generator (App. G substitution, DESIGN.md §5):
+/// 10 balanced classes over 784 "pixel" features in [0, 1]. Each class is
+/// a smooth random prototype plus a random `manifold_dim`-dimensional
+/// linear manifold plus pixel noise, clipped to [0, 1] — matching MNIST's
+/// shape (n x 784, 10 labels), bounded range, and per-class low intrinsic
+/// dimensionality, which is what drives both the timing results and the
+/// fuzziness comparison.
+pub fn mnist_like(n_samples: usize, seed: u64) -> Dataset {
+    const P: usize = 784;
+    const CLASSES: usize = 10;
+    const MANIFOLD: usize = 8;
+    let mut rng = Rng::seed_from(seed);
+
+    // Smooth prototypes: random low-frequency blobs on the 28x28 grid.
+    let mut protos = vec![0.0; CLASSES * P];
+    for c in 0..CLASSES {
+        // 4 Gaussian blobs per class prototype
+        for _ in 0..4 {
+            let (cx, cy) = (4.0 + 20.0 * rng.f64(), 4.0 + 20.0 * rng.f64());
+            let s = 2.0 + 3.0 * rng.f64();
+            let amp = 0.5 + 0.5 * rng.f64();
+            for yy in 0..28 {
+                for xx in 0..28 {
+                    let d2 = (xx as f64 - cx).powi(2) + (yy as f64 - cy).powi(2);
+                    protos[c * P + yy * 28 + xx] += amp * (-d2 / (2.0 * s * s)).exp();
+                }
+            }
+        }
+    }
+    // Per-class manifold directions. Scaled so classes overlap for a
+    // minority of samples — real MNIST has ~3% 1-NN error; a generator
+    // with zero overlap degenerates the App. G fuzziness comparison
+    // (every wrong label would sit exactly at the 1/(n+1) floor).
+    let mut dirs = vec![0.0; CLASSES * MANIFOLD * P];
+    for v in dirs.iter_mut() {
+        *v = rng.normal() * 0.12;
+    }
+
+    let mut x = vec![0.0; n_samples * P];
+    let mut y = Vec::with_capacity(n_samples);
+    for i in 0..n_samples {
+        let c = i % CLASSES;
+        let row = &mut x[i * P..(i + 1) * P];
+        row.copy_from_slice(&protos[c * P..(c + 1) * P]);
+        for m in 0..MANIFOLD {
+            let z = rng.normal();
+            let d = &dirs[(c * MANIFOLD + m) * P..(c * MANIFOLD + m + 1) * P];
+            for (r, dv) in row.iter_mut().zip(d) {
+                *r += z * dv;
+            }
+        }
+        for r in row.iter_mut() {
+            *r = (*r + 0.08 * rng.normal()).clamp(0.0, 1.0);
+        }
+        y.push(c);
+    }
+    let mut ds = Dataset::new(x, y, P, CLASSES);
+    shuffle_rows(&mut ds, &mut rng);
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_shapes_and_balance() {
+        let ds = make_classification(
+            &ClassificationSpec {
+                n_samples: 200,
+                ..Default::default()
+            },
+            1,
+        );
+        assert_eq!(ds.n(), 200);
+        assert_eq!(ds.p, 30);
+        let counts = ds.label_counts();
+        assert_eq!(counts.len(), 2);
+        // balanced up to flip_y noise
+        assert!((counts[0] as i64 - 100).abs() < 15, "{counts:?}");
+    }
+
+    #[test]
+    fn classification_is_separable_enough() {
+        // 1-NN on a held-out split should beat chance comfortably: the
+        // informative subspace must actually carry signal.
+        let ds = make_classification(
+            &ClassificationSpec {
+                n_samples: 400,
+                class_sep: 2.0,
+                flip_y: 0.0,
+                ..Default::default()
+            },
+            2,
+        );
+        let mut rng = Rng::seed_from(3);
+        let (tr, te) = ds.split(300, &mut rng);
+        let mut correct = 0;
+        for i in 0..te.n() {
+            let q = te.row(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for j in 0..tr.n() {
+                let d: f64 = q
+                    .iter()
+                    .zip(tr.row(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d < best.0 {
+                    best = (d, tr.y[j]);
+                }
+            }
+            if best.1 == te.y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / te.n() as f64;
+        assert!(acc > 0.7, "1-NN accuracy too low: {acc}");
+    }
+
+    #[test]
+    fn classification_deterministic() {
+        let a = make_classification(&Default::default(), 7);
+        let b = make_classification(&Default::default(), 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn regression_is_linear_signal() {
+        let ds = make_regression(
+            &RegressionSpec {
+                n_samples: 300,
+                noise: 0.0,
+                ..Default::default()
+            },
+            5,
+        );
+        assert_eq!(ds.n(), 300);
+        // Exact linear model: y variance should be fully explained by X's
+        // informative block; sanity-check magnitudes.
+        let var: f64 =
+            ds.y.iter().map(|v| v * v).sum::<f64>() / ds.n() as f64;
+        assert!(var > 1.0, "targets look degenerate: var={var}");
+    }
+
+    #[test]
+    fn mnist_like_shape_range_classes() {
+        let ds = mnist_like(100, 9);
+        assert_eq!(ds.p, 784);
+        assert_eq!(ds.n_labels, 10);
+        assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let counts = ds.label_counts();
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+}

@@ -1,0 +1,52 @@
+//! # exact-cp — Exact Optimization of Conformal Predictors
+//!
+//! Production-grade reproduction of *Exact Optimization of Conformal
+//! Predictors via Incremental and Decremental Learning* (Cherubin,
+//! Chatzikokolakis & Jaggi, ICML 2021), as a three-layer Rust + JAX +
+//! Pallas system: Pallas kernels and JAX graphs are AOT-lowered to HLO at
+//! build time (`make artifacts`), and this crate loads and executes them
+//! through the PJRT C API on the serving hot path — Python never runs at
+//! request time.
+//!
+//! ## Layout
+//!
+//! - [`data`] — dataset substrate: deterministic RNG, sklearn-equivalent
+//!   `make_classification` / `make_regression` ports, MNIST-like
+//!   generator.
+//! - [`linalg`] — dense linear algebra and distance kernels (native
+//!   fallback for the PJRT path) plus `select_k` (introselect, the
+//!   `numpy.argpartition` the paper's implementation relies on).
+//! - [`cp`] — the conformal prediction core: nonconformity traits,
+//!   p-values, full CP (Algorithm 1), ICP (Algorithm 2), metrics.
+//! - [`measures`] — every nonconformity measure the paper studies, in
+//!   *standard* and *optimized* (incremental&decremental) variants:
+//!   k-NN, Simplified k-NN (§3), KDE (§4), kernel LS-SVM (§5),
+//!   bootstrap / Random Forest (§6) with its decision-tree substrate.
+//! - [`regression`] — full CP regression (§8): the Papadopoulos et al.
+//!   (2011) k-NN regressor, our incremental&decremental optimization of
+//!   it, ridge (RRCM) full CP, and ICP regression baselines.
+//! - [`online`] — the Vovk et al. (2003) exchangeability/IID test with
+//!   incremental p-values and betting martingales (§9, App. C.5).
+//! - [`cluster`] — conformal clustering and anomaly detection (§9).
+//! - [`runtime`] — PJRT client wrapper: artifact registry, shape
+//!   bucketing, padding/masking, executable cache.
+//! - [`coordinator`] — L3 serving system: request router, dynamic
+//!   batcher, online learn/unlearn state management, metrics.
+//! - [`bench_harness`] — drivers regenerating every table and figure of
+//!   the paper's evaluation (see DESIGN.md §4).
+
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod cp;
+pub mod data;
+pub mod linalg;
+pub mod measures;
+pub mod online;
+pub mod regression;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

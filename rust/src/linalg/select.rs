@@ -1,0 +1,197 @@
+//! k-smallest selection — the `best_k` routine of App. C.1.
+//!
+//! The paper instantiates `best_k` to introselect (numpy's
+//! `argpartition`), O(n) worst case. Rust's `select_nth_unstable` is the
+//! same algorithm (median-of-medians fallback quickselect), so the
+//! optimized measures here have the exact complexity profile the paper
+//! analyzes.
+
+/// Return the `k` smallest values of `xs` in ascending order.
+/// If `k >= xs.len()`, returns all of `xs` sorted.
+pub fn k_smallest(xs: &[f64], k: usize) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    let k = k.min(v.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    if k < v.len() {
+        v.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+        v.truncate(k);
+    }
+    v.sort_unstable_by(|a, b| a.total_cmp(b));
+    v
+}
+
+/// k smallest of `items` under `key`, ascending by key. O(n + k log k).
+pub fn k_smallest_by<T: Clone>(
+    items: &[T],
+    k: usize,
+    key: impl Fn(&T) -> f64,
+) -> Vec<T> {
+    let mut v = items.to_vec();
+    let k = k.min(v.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    if k < v.len() {
+        v.select_nth_unstable_by(k - 1, |a, b| key(a).total_cmp(&key(b)));
+        v.truncate(k);
+    }
+    v.sort_unstable_by(|a, b| key(a).total_cmp(&key(b)));
+    v
+}
+
+/// Bounded max-structure holding the k smallest values seen so far.
+///
+/// This is the incremental half of the k-NN optimization: each training
+/// point keeps its k best same-label (and for full k-NN, different-label)
+/// distances; learning a new example is an O(k) `insert`, and the
+/// provisional-score update of §3.1 needs only `max()` and `sum()`.
+/// k is small (paper: 15), so a sorted array beats a heap.
+#[derive(Clone, Debug)]
+pub struct KBest {
+    k: usize,
+    /// ascending
+    vals: Vec<f64>,
+    sum: f64,
+}
+
+impl KBest {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        KBest {
+            k,
+            vals: Vec::with_capacity(k + 1),
+            sum: 0.0,
+        }
+    }
+
+    /// Build from an unordered candidate set.
+    pub fn from_slice(k: usize, xs: &[f64]) -> Self {
+        let vals = k_smallest(xs, k);
+        let sum = vals.iter().sum();
+        KBest { k, vals, sum }
+    }
+
+    /// Number of stored distances (may be < k when fewer candidates exist).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    /// True when the structure holds a full complement of k values.
+    #[inline]
+    pub fn full(&self) -> bool {
+        self.vals.len() == self.k
+    }
+
+    /// Sum of the stored (<= k) smallest values.
+    #[inline]
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Largest stored value (the k-th smallest when full), or +inf when
+    /// empty — so `d < kbest.max()` is exactly the "x enters the k-NN
+    /// set" test of §3.1 in all fill states.
+    #[inline]
+    pub fn max(&self) -> f64 {
+        self.vals.last().copied().unwrap_or(f64::INFINITY)
+    }
+
+    /// Sum if `d` were inserted (without mutating): the §3.1 update rule
+    ///   alpha_i = alpha'_i - Delta_i^k + d   if d < Delta_i^k
+    /// generalized to the under-full case (new value simply joins).
+    #[inline]
+    pub fn sum_with(&self, d: f64) -> f64 {
+        if !self.full() {
+            self.sum + d
+        } else if d < self.max() {
+            self.sum - self.max() + d
+        } else {
+            self.sum
+        }
+    }
+
+    /// Incrementally learn a new distance. O(k).
+    pub fn insert(&mut self, d: f64) {
+        let pos = self.vals.partition_point(|&v| v <= d);
+        if self.vals.len() < self.k {
+            self.vals.insert(pos, d);
+            self.sum += d;
+        } else if pos < self.k {
+            self.sum += d - self.vals[self.k - 1];
+            self.vals.pop();
+            self.vals.insert(pos, d);
+        }
+    }
+
+    /// Stored values, ascending.
+    pub fn values(&self) -> &[f64] {
+        &self.vals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_smallest_basic() {
+        let xs = [5., 1., 4., 2., 3.];
+        assert_eq!(k_smallest(&xs, 3), vec![1., 2., 3.]);
+        assert_eq!(k_smallest(&xs, 0), Vec::<f64>::new());
+        assert_eq!(k_smallest(&xs, 10), vec![1., 2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn k_smallest_with_ties_and_inf() {
+        let xs = [2., 2., f64::INFINITY, 1., 1.];
+        assert_eq!(k_smallest(&xs, 3), vec![1., 1., 2.]);
+    }
+
+    #[test]
+    fn k_smallest_by_keys() {
+        let items = [(0, 5.0), (1, 1.0), (2, 3.0)];
+        let got = k_smallest_by(&items, 2, |t| t.1);
+        assert_eq!(got.iter().map(|t| t.0).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn kbest_matches_sort_under_inserts() {
+        use crate::data::Rng;
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..50 {
+            let k = 1 + rng.below(6);
+            let n = rng.below(20);
+            let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+            let mut kb = KBest::new(k);
+            for &x in &xs {
+                kb.insert(x);
+            }
+            let want = k_smallest(&xs, k);
+            assert_eq!(kb.values(), &want[..], "k={k} xs={xs:?}");
+            let sum: f64 = want.iter().sum();
+            assert!((kb.sum() - sum).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn kbest_sum_with_semantics() {
+        let mut kb = KBest::new(2);
+        assert_eq!(kb.max(), f64::INFINITY);
+        assert_eq!(kb.sum_with(3.0), 3.0); // under-full: joins
+        kb.insert(5.0);
+        assert_eq!(kb.sum_with(3.0), 8.0); // still under-full
+        kb.insert(4.0);
+        assert_eq!(kb.sum(), 9.0);
+        assert_eq!(kb.max(), 5.0);
+        assert_eq!(kb.sum_with(3.0), 7.0); // evicts the 5
+        assert_eq!(kb.sum_with(6.0), 9.0); // no change
+    }
+}

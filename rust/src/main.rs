@@ -1,0 +1,310 @@
+//! `repro` — the exact-cp launcher.
+//!
+//! ```text
+//! repro experiment <id>|all [--config F] [--out DIR] [--sizes a,b,c]
+//!                  [--seeds K] [--n-test M] [--timeout S] [--paper-scale]
+//! repro serve      [--config F] [--addr A] [--n N] [--measures knn,kde]
+//!                  [--use-pjrt]
+//! repro predict    [--measure M] [--n N] [--eps E] [--use-pjrt]
+//! repro artifacts  [--dir DIR]            # inspect the AOT manifest
+//! repro selfcheck                          # exactness spot-check
+//! ```
+//!
+//! Argument parsing is in-tree (the offline build has no clap).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use exact_cp::bench_harness::{self, ALL_EXPERIMENTS};
+use exact_cp::config::{Config, MeasureKind};
+use exact_cp::coordinator::factory::{build_measure, build_standard_measure, select_engine};
+use exact_cp::coordinator::server::{serve, Server};
+use exact_cp::coordinator::state::{Deployment, Registry};
+use exact_cp::cp::pvalue::p_value;
+use exact_cp::data::{make_classification, ClassificationSpec};
+use exact_cp::runtime::PjrtRuntime;
+
+/// Minimal flag parser: positional args + `--key value` + `--flag`.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+const BOOL_FLAGS: [&str; 3] = ["paper-scale", "use-pjrt", "help"];
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if BOOL_FLAGS.contains(&key)
+                    || i + 1 >= argv.len()
+                    || argv[i + 1].starts_with("--")
+                {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                } else {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = Config::load_or_default(args.get("config"))?;
+    if let Some(sizes) = args.get("sizes") {
+        cfg.experiment.train_sizes = sizes
+            .split(',')
+            .map(|s| s.trim().parse().context("bad --sizes"))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(v) = args.get("seeds") {
+        cfg.experiment.seeds = v.parse()?;
+    }
+    if let Some(v) = args.get("n-test") {
+        cfg.experiment.n_test = v.parse()?;
+    }
+    if let Some(v) = args.get("timeout") {
+        cfg.experiment.timeout_s = v.parse()?;
+    }
+    if let Some(v) = args.get("out") {
+        cfg.experiment.out_dir = v.into();
+    }
+    if let Some(v) = args.get("k") {
+        cfg.measure.k = v.parse()?;
+    }
+    if args.has("paper-scale") {
+        cfg.experiment.paper_scale = true;
+    }
+    if args.has("use-pjrt") {
+        cfg.use_pjrt = true;
+    }
+    Ok(cfg)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("experiment") => cmd_experiment(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("selfcheck") => cmd_selfcheck(&args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+repro — Exact Optimization of Conformal Predictors (ICML 2021 reproduction)
+
+USAGE:
+  repro experiment <id>|all [--out DIR] [--sizes a,b,c] [--seeds K]
+                   [--n-test M] [--timeout S] [--paper-scale] [--config F]
+      ids: fig2 fig3 fig4 fig5 fig6 table1 table2 table3 fuzziness iid
+  repro serve   [--addr HOST:PORT] [--n N] [--measures knn,kde,...]
+                [--use-pjrt] [--config F]
+  repro predict [--measure M] [--n N] [--eps E] [--use-pjrt]
+  repro artifacts [--dir DIR]
+  repro selfcheck
+";
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let ids: Vec<&str> = if id == "all" {
+        ALL_EXPERIMENTS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        println!("== experiment {id} ==");
+        let t0 = std::time::Instant::now();
+        let report = bench_harness::run_experiment(id, &cfg)?;
+        println!(
+            "== {id}: {} rows in {:.1}s ==\n",
+            report.rows.len(),
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n: usize = args.get("n").map(|v| v.parse()).transpose()?.unwrap_or(1000);
+    let measures = args.get("measures").unwrap_or("simplified-knn,kde");
+    let addr = args
+        .get("addr")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| cfg.serve.addr.clone());
+
+    let engine = select_engine(cfg.use_pjrt, &cfg.artifacts_dir);
+    let ds = make_classification(
+        &ClassificationSpec {
+            n_samples: n,
+            ..Default::default()
+        },
+        1,
+    );
+    let registry = Arc::new(Registry::new());
+    for name in measures.split(',') {
+        let kind: MeasureKind = name.trim().parse()?;
+        println!("training deployment {name} on n={n}...");
+        registry.insert(Deployment::train(
+            name.trim(),
+            kind,
+            &cfg.measure,
+            &ds,
+            Some(engine.clone()),
+        ));
+    }
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.addr = addr.clone();
+    let server = Arc::new(Server::start(serve_cfg, registry));
+    let listener = std::net::TcpListener::bind(&addr)
+        .with_context(|| format!("binding {addr}"))?;
+    println!(
+        "serving {} deployment(s) on {addr} (engine: {}) — JSON lines; \
+         send {{\"op\":\"shutdown\"}} to stop",
+        measures.split(',').count(),
+        engine.name(),
+    );
+    serve(server, listener)
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let kind: MeasureKind = args.get("measure").unwrap_or("simplified-knn").parse()?;
+    let n: usize = args.get("n").map(|v| v.parse()).transpose()?.unwrap_or(500);
+    let eps: f64 = args.get("eps").map(|v| v.parse()).transpose()?.unwrap_or(0.1);
+    let engine = select_engine(cfg.use_pjrt, &cfg.artifacts_dir);
+
+    let ds = make_classification(
+        &ClassificationSpec {
+            n_samples: n + 5,
+            ..Default::default()
+        },
+        1,
+    );
+    let mut rng = exact_cp::data::Rng::seed_from(2);
+    let (train, test) = ds.split(n, &mut rng);
+    let mut m = build_measure(kind, &cfg.measure, Some(engine));
+    let t0 = std::time::Instant::now();
+    m.fit(&train);
+    println!("trained {} on n={n} in {:.3}s", m.name(), t0.elapsed().as_secs_f64());
+    for i in 0..test.n() {
+        let t0 = std::time::Instant::now();
+        let ps: Vec<f64> = (0..train.n_labels)
+            .map(|y| p_value(&m.scores(test.row(i), y)))
+            .collect();
+        let set: Vec<usize> = ps
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p > eps)
+            .map(|(y, _)| y)
+            .collect();
+        println!(
+            "test[{i}] true={} p_values={ps:?} set(eps={eps})={set:?} \
+             ({:.2}ms)",
+            test.y[i],
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get("dir").unwrap_or("artifacts");
+    let rt = PjrtRuntime::open(dir)?;
+    println!(
+        "{} artifacts in {dir} (PJRT CPU client ready)",
+        rt.manifest().len()
+    );
+    for (name, info) in &rt.manifest().artifacts {
+        println!("  {name:<28} {:?}", info.arg_shapes);
+    }
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ds = make_classification(
+        &ClassificationSpec {
+            n_samples: 60,
+            ..Default::default()
+        },
+        1,
+    );
+    let probe = make_classification(
+        &ClassificationSpec {
+            n_samples: 5,
+            ..Default::default()
+        },
+        2,
+    );
+    println!("exactness spot-check (optimized vs standard p-values):");
+    let mut mc = cfg.measure.clone();
+    mc.b = 5;
+    for kind in [
+        MeasureKind::SimplifiedKnn,
+        MeasureKind::Knn,
+        MeasureKind::Kde,
+        MeasureKind::LsSvm,
+    ] {
+        let mut s = build_standard_measure(kind, &mc);
+        let mut o = build_measure(kind, &mc, None);
+        s.fit(&ds);
+        o.fit(&ds);
+        let mut max_dp: f64 = 0.0;
+        for i in 0..probe.n() {
+            for y in 0..2 {
+                let ps = p_value(&s.scores(probe.row(i), y));
+                let po = p_value(&o.scores(probe.row(i), y));
+                max_dp = max_dp.max((ps - po).abs());
+            }
+        }
+        println!(
+            "  {:<16} max |Δp| = {max_dp:.2e}  {}",
+            kind.as_str(),
+            if max_dp < 1e-12 { "EXACT" } else { "MISMATCH" }
+        );
+        if max_dp >= 1e-12 {
+            bail!("exactness violated for {}", kind.as_str());
+        }
+    }
+    println!("selfcheck OK");
+    Ok(())
+}

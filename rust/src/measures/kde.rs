@@ -1,0 +1,459 @@
+//! Kernel Density Estimation nonconformity measure (paper §4):
+//!
+//!   A((x,y); Z) = - 1/(n_y h^p) * sum_{x_i : y_i = y} K((x - x_i)/h)
+//!
+//! with the Gaussian kernel K(u) = exp(-||u||^2 / 2) (App. E). The
+//! standard variant recomputes the kernel sum on every LOO bag; the
+//! optimized variant (§4.1 — the paper's novel incremental&decremental
+//! KDE) precomputes preliminary scores
+//!
+//!   alpha'_i = sum_{j != i : y_j = y_i} K((x_i - x_j)/h)
+//!
+//! at training time and applies an O(P_K) update per point at prediction
+//! time.
+//!
+//! `n_y` is the number of examples in the *scored example's own bag*
+//! carrying its label — for alpha_i that bag is {(x,y)} u Z \ {i}, so
+//! n_{y_i} = count(y_i) - 1 + [y == y_i]; both variants derive it the
+//! same way, keeping them exactly equal.
+//!
+//! Numerical stability: the h^p factor is label-independent and constant
+//! across all n+1 scores of a p-value computation, so it never changes
+//! score ordering; we keep it for fidelity but compute it in log space
+//! and skip it when it would under/overflow f64 (p = 784 with h != 1),
+//! which is this implementation's replacement for the paper's
+//! arbitrary-precision fallback (App. G, DESIGN.md §5).
+
+use crate::cp::icp::IcpMeasure;
+use crate::cp::measure::{CpMeasure, Scores};
+use crate::data::{Dataset, Label};
+use crate::linalg::engine::{native, Engine};
+
+/// 1/h^p scale, or 1.0 when it would leave f64 range (ordering-safe).
+fn h_scale(h: f64, p: usize) -> f64 {
+    let log = -(p as f64) * h.ln();
+    if log.abs() > 600.0 {
+        1.0
+    } else {
+        log.exp()
+    }
+}
+
+/// Shared final-score formula: alpha = -(1/(n_y h^p)) * ksum.
+#[inline]
+fn kde_alpha(ksum: f64, n_y: usize, scale: f64) -> f64 {
+    if n_y == 0 {
+        0.0
+    } else {
+        -(scale / n_y as f64) * ksum
+    }
+}
+
+// ---------------------------------------------------------------------
+// Standard
+// ---------------------------------------------------------------------
+
+/// Standard KDE full-CP measure: O(P_K n^2 l m) prediction.
+pub struct KdeStandard {
+    pub h: f64,
+    ds: Option<Dataset>,
+    engine: Engine,
+}
+
+impl KdeStandard {
+    pub fn new(h: f64) -> Self {
+        KdeStandard {
+            h,
+            ds: None,
+            engine: native(),
+        }
+    }
+
+    pub fn with_engine(h: f64, engine: Engine) -> Self {
+        KdeStandard {
+            h,
+            ds: None,
+            engine,
+        }
+    }
+}
+
+impl CpMeasure for KdeStandard {
+    fn name(&self) -> String {
+        "kde-standard".into()
+    }
+
+    fn fit(&mut self, ds: &Dataset) {
+        self.ds = Some(ds.clone());
+    }
+
+    fn scores(&self, x: &[f64], y: Label) -> Scores {
+        let ds = self.ds.as_ref().expect("fit first");
+        let n = ds.n();
+        let h2 = self.h * self.h;
+        let scale = h_scale(self.h, ds.p);
+        let counts = ds.label_counts();
+
+        // kernel row for the test point
+        let mut k_test = vec![0.0; n];
+        self.engine.kde_row(x, &ds.x, ds.p, h2, &mut k_test);
+
+        let mut train = Vec::with_capacity(n);
+        let mut k_i = vec![0.0; n];
+        for i in 0..n {
+            self.engine.kde_row(ds.row(i), &ds.x, ds.p, h2, &mut k_i);
+            // sum over the bag {(x,y)} u Z \ {i} restricted to label y_i
+            let mut ksum = 0.0;
+            for j in 0..n {
+                if j != i && ds.y[j] == ds.y[i] {
+                    ksum += k_i[j];
+                }
+            }
+            let mut n_y = counts[ds.y[i]] - 1;
+            if y == ds.y[i] {
+                ksum += k_test[i];
+                n_y += 1;
+            }
+            train.push(kde_alpha(ksum, n_y, scale));
+        }
+
+        // test score over bag Z restricted to label y
+        let mut ksum = 0.0;
+        for j in 0..n {
+            if ds.y[j] == y {
+                ksum += k_test[j];
+            }
+        }
+        let n_y = if y < counts.len() { counts[y] } else { 0 };
+        Scores {
+            train,
+            test: kde_alpha(ksum, n_y, scale),
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n())
+    }
+
+    fn n_labels(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n_labels)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Optimized (§4.1)
+// ---------------------------------------------------------------------
+
+/// Optimized KDE full-CP measure: O(P_K n^2) train, O(P_K n l m) predict.
+pub struct KdeOptimized {
+    pub h: f64,
+    ds: Option<Dataset>,
+    /// preliminary scores alpha'_i = sum_{j!=i, y_j=y_i} K_ij
+    prelim: Vec<f64>,
+    counts: Vec<usize>,
+    engine: Engine,
+}
+
+impl KdeOptimized {
+    pub fn new(h: f64) -> Self {
+        Self::with_engine(h, native())
+    }
+
+    pub fn with_engine(h: f64, engine: Engine) -> Self {
+        KdeOptimized {
+            h,
+            ds: None,
+            prelim: Vec::new(),
+            counts: Vec::new(),
+            engine,
+        }
+    }
+}
+
+impl CpMeasure for KdeOptimized {
+    fn name(&self) -> String {
+        "kde-optimized".into()
+    }
+
+    fn fit(&mut self, ds: &Dataset) {
+        let n = ds.n();
+        let h2 = self.h * self.h;
+        self.ds = Some(ds.clone());
+        self.counts = ds.label_counts();
+        self.prelim = vec![0.0; n];
+        // streamed row-by-row: O(n) memory as in App. D
+        let mut k_i = vec![0.0; n];
+        for i in 0..n {
+            self.engine.kde_row(ds.row(i), &ds.x, ds.p, h2, &mut k_i);
+            let mut s = 0.0;
+            for j in 0..n {
+                if j != i && ds.y[j] == ds.y[i] {
+                    s += k_i[j];
+                }
+            }
+            self.prelim[i] = s;
+        }
+    }
+
+    fn scores(&self, x: &[f64], y: Label) -> Scores {
+        let ds = self.ds.as_ref().expect("fit first");
+        let n = ds.n();
+        let h2 = self.h * self.h;
+        let scale = h_scale(self.h, ds.p);
+
+        let mut k_test = vec![0.0; n];
+        self.engine.kde_row(x, &ds.x, ds.p, h2, &mut k_test);
+
+        let mut train = Vec::with_capacity(n);
+        let mut test_sum = 0.0;
+        for i in 0..n {
+            let (ksum, n_y) = if ds.y[i] == y {
+                test_sum += k_test[i];
+                (self.prelim[i] + k_test[i], self.counts[ds.y[i]])
+            } else {
+                (self.prelim[i], self.counts[ds.y[i]] - 1)
+            };
+            train.push(kde_alpha(ksum, n_y, scale));
+        }
+        let n_y = if y < self.counts.len() {
+            self.counts[y]
+        } else {
+            0
+        };
+        Scores {
+            train,
+            test: kde_alpha(test_sum, n_y, scale),
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n())
+    }
+
+    fn n_labels(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n_labels)
+    }
+
+    /// Online increment: O(P_K n).
+    fn learn(&mut self, x: &[f64], y: Label) -> bool {
+        let Some(ds) = self.ds.as_mut() else {
+            return false;
+        };
+        let h2 = self.h * self.h;
+        let n = ds.n();
+        let mut k = vec![0.0; n];
+        self.engine.kde_row(x, &ds.x, ds.p, h2, &mut k);
+        let mut own = 0.0;
+        for i in 0..n {
+            if ds.y[i] == y {
+                self.prelim[i] += k[i];
+                own += k[i];
+            }
+        }
+        self.prelim.push(own);
+        ds.push(x, y);
+        if y >= self.counts.len() {
+            self.counts.resize(y + 1, 0);
+        }
+        self.counts[y] += 1;
+        true
+    }
+
+    /// Online decrement: O(P_K n).
+    fn unlearn(&mut self, idx: usize) -> bool {
+        let Some(ds) = self.ds.as_mut() else {
+            return false;
+        };
+        if idx >= ds.n() {
+            return false;
+        }
+        let h2 = self.h * self.h;
+        let n = ds.n();
+        let x_rm = ds.row(idx).to_vec();
+        let y_rm = ds.y[idx];
+        let mut k = vec![0.0; n];
+        self.engine.kde_row(&x_rm, &ds.x, ds.p, h2, &mut k);
+        for i in 0..n {
+            if i != idx && ds.y[i] == y_rm {
+                self.prelim[i] -= k[i];
+            }
+        }
+        self.prelim.remove(idx);
+        self.counts[y_rm] -= 1;
+        ds.remove(idx);
+        true
+    }
+}
+
+// ---------------------------------------------------------------------
+// ICP
+// ---------------------------------------------------------------------
+
+/// Inductive KDE measure.
+pub struct IcpKde {
+    pub h: f64,
+    proper: Option<Dataset>,
+    counts: Vec<usize>,
+    engine: Engine,
+}
+
+impl IcpKde {
+    pub fn new(h: f64) -> Self {
+        IcpKde {
+            h,
+            proper: None,
+            counts: Vec::new(),
+            engine: native(),
+        }
+    }
+}
+
+impl IcpMeasure for IcpKde {
+    fn name(&self) -> String {
+        "icp-kde".into()
+    }
+
+    fn fit(&mut self, proper: &Dataset) {
+        self.counts = proper.label_counts();
+        self.proper = Some(proper.clone());
+    }
+
+    fn score(&self, x: &[f64], y: Label) -> f64 {
+        let ds = self.proper.as_ref().expect("fit first");
+        let h2 = self.h * self.h;
+        let scale = h_scale(self.h, ds.p);
+        let mut k = vec![0.0; ds.n()];
+        self.engine.kde_row(x, &ds.x, ds.p, h2, &mut k);
+        let ksum: f64 = (0..ds.n())
+            .filter(|&j| ds.y[j] == y)
+            .map(|j| k[j])
+            .sum();
+        let n_y = if y < self.counts.len() {
+            self.counts[y]
+        } else {
+            0
+        };
+        kde_alpha(ksum, n_y, scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::pvalue::p_value;
+    use crate::data::{make_classification, ClassificationSpec};
+
+    fn small_ds(n: usize, seed: u64) -> Dataset {
+        make_classification(
+            &ClassificationSpec {
+                n_samples: n,
+                n_features: 6,
+                n_informative: 3,
+                n_redundant: 1,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn optimized_matches_standard() {
+        let ds = small_ds(35, 1);
+        let mut s = KdeStandard::new(1.0);
+        let mut o = KdeOptimized::new(1.0);
+        s.fit(&ds);
+        o.fit(&ds);
+        let probe = small_ds(8, 2);
+        for i in 0..probe.n() {
+            for y in 0..2 {
+                let a = s.scores(probe.row(i), y);
+                let b = o.scores(probe.row(i), y);
+                for (u, v) in a.train.iter().zip(&b.train) {
+                    assert!((u - v).abs() < 1e-10, "{u} vs {v}");
+                }
+                assert!((a.test - b.test).abs() < 1e-10);
+                assert_eq!(p_value(&a), p_value(&b));
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_affects_scores() {
+        let ds = small_ds(20, 3);
+        let mut narrow = KdeOptimized::new(0.2);
+        let mut wide = KdeOptimized::new(5.0);
+        narrow.fit(&ds);
+        wide.fit(&ds);
+        let a = narrow.scores(ds.row(0), ds.y[0]);
+        let b = wide.scores(ds.row(0), ds.y[0]);
+        assert!(a.test != b.test);
+    }
+
+    #[test]
+    fn learn_then_unlearn_roundtrip() {
+        let ds = small_ds(25, 4);
+        let mut m = KdeOptimized::new(1.0);
+        m.fit(&ds);
+        let before: Vec<f64> = m.prelim.clone();
+        let x_new = vec![0.5; 6];
+        assert!(m.learn(&x_new, 1));
+        assert!(m.unlearn(25)); // remove the point just added
+        for (a, b) in m.prelim.iter().zip(&before) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        assert_eq!(m.n(), 25);
+    }
+
+    #[test]
+    fn learn_matches_refit() {
+        let ds = small_ds(20, 5);
+        let extra = small_ds(5, 6);
+        let mut inc = KdeOptimized::new(1.0);
+        inc.fit(&ds);
+        let mut grown = ds.clone();
+        for i in 0..extra.n() {
+            inc.learn(extra.row(i), extra.y[i]);
+            grown.push(extra.row(i), extra.y[i]);
+        }
+        let mut refit = KdeOptimized::new(1.0);
+        refit.fit(&grown);
+        let q = small_ds(3, 7);
+        for i in 0..q.n() {
+            for y in 0..2 {
+                let a = inc.scores(q.row(i), y);
+                let b = refit.scores(q.row(i), y);
+                for (u, v) in a.train.iter().zip(&b.train) {
+                    assert!((u - v).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn high_dim_does_not_produce_nan() {
+        // p=784-style: kernel values underflow to 0, but scores must
+        // remain finite (log-space h_scale guard).
+        let mut x = vec![0.0; 200 * 784];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = ((i * 2654435761) % 1000) as f64 / 1000.0;
+        }
+        let ds = Dataset::new(x, (0..200).map(|i| i % 10).collect(), 784, 10);
+        let mut m = KdeOptimized::new(1.0);
+        m.fit(&ds);
+        let s = m.scores(ds.row(0), 0);
+        assert!(s.train.iter().all(|v| v.is_finite()));
+        assert!(s.test.is_finite());
+    }
+
+    #[test]
+    fn icp_kde_prefers_own_label() {
+        let ds = small_ds(60, 8);
+        let mut icp = IcpKde::new(1.0);
+        icp.fit(&ds);
+        // centroid-ish point of class 0
+        let i0 = (0..ds.n()).find(|&i| ds.y[i] == 0).unwrap();
+        let s_own = icp.score(ds.row(i0), 0);
+        let s_other = icp.score(ds.row(i0), 1);
+        assert!(s_own < s_other, "{s_own} vs {s_other}");
+    }
+}

@@ -1,0 +1,635 @@
+//! Nearest-neighbour nonconformity measures (paper §3): *k-NN* (Eq. 2)
+//! and *Simplified k-NN*, each in a standard O(n^2 l m) variant and the
+//! paper's optimized O(n l m) incremental&decremental variant (§3.1).
+//!
+//! Edge-case conventions (shared by standard and optimized variants so
+//! the exactness tests hold bit-for-bit):
+//!
+//! * a k-NN sum over an *empty* candidate set is +inf (no support for
+//!   the label -> maximally nonconforming);
+//! * with fewer than k candidates, the sum runs over what exists (and
+//!   the incoming test point simply joins the set, evicting nothing);
+//! * the k-NN ratio with a zero denominator is +inf unless the
+//!   numerator is zero too (duplicate points on both sides), which is
+//!   1.0; empty-num/empty-den is 1.0 (no information).
+
+use crate::cp::measure::{CpMeasure, Scores};
+use crate::cp::icp::IcpMeasure;
+use crate::data::{Dataset, Label};
+use crate::linalg::engine::{native, Engine};
+use crate::linalg::select::KBest;
+
+/// Sum semantics for a possibly-underfull neighbour set.
+#[inline]
+fn knn_sum(len: usize, sum: f64) -> f64 {
+    if len == 0 {
+        f64::INFINITY
+    } else {
+        sum
+    }
+}
+
+/// Ratio semantics for the full k-NN measure (Eq. 2).
+#[inline]
+fn knn_ratio(num_len: usize, num: f64, den_len: usize, den: f64) -> f64 {
+    match (num_len == 0, den_len == 0) {
+        (true, true) => 1.0,
+        (true, false) => f64::INFINITY,
+        (false, true) => 0.0,
+        (false, false) => {
+            if den == 0.0 {
+                if num == 0.0 {
+                    1.0
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                num / den
+            }
+        }
+    }
+}
+
+/// Sum of the k smallest same-/different-label distances from `x` to
+/// the training set, streamed without allocating per-label vectors.
+fn kbest_split(
+    d: &[f64],
+    ys: &[Label],
+    skip: Option<usize>,
+    label: Label,
+    k: usize,
+) -> (KBest, KBest) {
+    let mut same = KBest::new(k);
+    let mut diff = KBest::new(k);
+    for (j, (&dj, &yj)) in d.iter().zip(ys).enumerate() {
+        if Some(j) == skip {
+            continue;
+        }
+        if yj == label {
+            same.insert(dj);
+        } else {
+            diff.insert(dj);
+        }
+    }
+    (same, diff)
+}
+
+// ---------------------------------------------------------------------
+// Standard variants — recompute the measure from scratch on every LOO
+// bag, exactly the paper's baseline (Table 1 "Standard").
+// ---------------------------------------------------------------------
+
+/// Standard (Simplified) k-NN full-CP measure.
+pub struct KnnStandard {
+    pub k: usize,
+    /// Simplified k-NN keeps only the same-label numerator.
+    pub simplified: bool,
+    ds: Option<Dataset>,
+    engine: Engine,
+}
+
+impl KnnStandard {
+    pub fn new(k: usize, simplified: bool) -> Self {
+        KnnStandard {
+            k,
+            simplified,
+            ds: None,
+            engine: native(),
+        }
+    }
+
+    pub fn with_engine(k: usize, simplified: bool, engine: Engine) -> Self {
+        KnnStandard {
+            k,
+            simplified,
+            ds: None,
+            engine,
+        }
+    }
+
+    fn ds(&self) -> &Dataset {
+        self.ds.as_ref().expect("fit() before scores()")
+    }
+
+    /// A((q, label); bag) where the bag is rows of `ds` minus `skip`,
+    /// plus optionally the test point at distance `d_test`.
+    fn measure_on_bag(
+        &self,
+        d_row: &[f64],
+        ys: &[Label],
+        skip: Option<usize>,
+        label: Label,
+        extra: Option<(f64, Label)>,
+    ) -> f64 {
+        let (mut same, mut diff) = kbest_split(d_row, ys, skip, label, self.k);
+        if let Some((d, y)) = extra {
+            if y == label {
+                same.insert(d);
+            } else {
+                diff.insert(d);
+            }
+        }
+        let num = knn_sum(same.len(), same.sum());
+        if self.simplified {
+            num
+        } else {
+            knn_ratio(same.len(), same.sum(), diff.len(), diff.sum())
+        }
+    }
+}
+
+impl CpMeasure for KnnStandard {
+    fn name(&self) -> String {
+        format!(
+            "{}-standard",
+            if self.simplified { "simplified-knn" } else { "knn" }
+        )
+    }
+
+    fn fit(&mut self, ds: &Dataset) {
+        self.ds = Some(ds.clone());
+    }
+
+    fn scores(&self, x: &[f64], y: Label) -> Scores {
+        let ds = self.ds();
+        let n = ds.n();
+        let p = ds.p;
+        let mut d_test = vec![0.0; n];
+        self.engine.dist_row_sq(x, &ds.x, p, &mut d_test);
+        for v in d_test.iter_mut() {
+            *v = v.sqrt();
+        }
+        let mut train = Vec::with_capacity(n);
+        let mut d_i = vec![0.0; n];
+        for i in 0..n {
+            // Distances from x_i to every training point; the bag for
+            // alpha_i excludes i itself and includes the test example.
+            self.engine.dist_row_sq(ds.row(i), &ds.x, p, &mut d_i);
+            for v in d_i.iter_mut() {
+                *v = v.sqrt();
+            }
+            let alpha = self.measure_on_bag(
+                &d_i,
+                &ds.y,
+                Some(i),
+                ds.y[i],
+                Some((d_test[i], y)),
+            );
+            train.push(alpha);
+        }
+        let test = self.measure_on_bag(&d_test, &ds.y, None, y, None);
+        Scores { train, test }
+    }
+
+    fn n(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n())
+    }
+
+    fn n_labels(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n_labels)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Optimized variants — §3.1: precompute per-point k-best structures in
+// the training phase; prediction-phase updates are O(1) per point.
+// ---------------------------------------------------------------------
+
+/// Optimized (Simplified) k-NN full-CP measure, incremental&decremental.
+pub struct KnnOptimized {
+    pub k: usize,
+    pub simplified: bool,
+    ds: Option<Dataset>,
+    /// per-point k best same-label distances (Delta_i^1..Delta_i^k)
+    same: Vec<KBest>,
+    /// per-point k best different-label distances (full k-NN only)
+    diff: Vec<KBest>,
+    engine: Engine,
+}
+
+impl KnnOptimized {
+    pub fn new(k: usize, simplified: bool) -> Self {
+        Self::with_engine(k, simplified, native())
+    }
+
+    pub fn with_engine(k: usize, simplified: bool, engine: Engine) -> Self {
+        KnnOptimized {
+            k,
+            simplified,
+            ds: None,
+            same: Vec::new(),
+            diff: Vec::new(),
+            engine,
+        }
+    }
+
+    fn ds(&self) -> &Dataset {
+        self.ds.as_ref().expect("fit() before scores()")
+    }
+
+    /// Rebuild row i's k-best structures from scratch (unlearn path).
+    fn rebuild_row(&mut self, i: usize) {
+        let ds = self.ds.as_ref().unwrap();
+        let mut d = vec![0.0; ds.n()];
+        self.engine.dist_row_sq(ds.row(i), &ds.x, ds.p, &mut d);
+        for v in d.iter_mut() {
+            *v = v.sqrt();
+        }
+        let (same, diff) = kbest_split(&d, &ds.y, Some(i), ds.y[i], self.k);
+        self.same[i] = same;
+        self.diff[i] = diff;
+    }
+}
+
+impl CpMeasure for KnnOptimized {
+    fn name(&self) -> String {
+        format!(
+            "{}-optimized",
+            if self.simplified { "simplified-knn" } else { "knn" }
+        )
+    }
+
+    /// Training phase: O(n^2 p) distance work, O(n k) memory (App. D) —
+    /// the pairwise matrix is streamed, never materialized. §Perf: on
+    /// the native engine each distance is computed once (upper triangle)
+    /// and inserted into both endpoints' k-best sets — a measured ~2x
+    /// over the row-per-point formulation; non-native engines (PJRT)
+    /// keep the row kernel, which is what they accelerate.
+    fn fit(&mut self, ds: &Dataset) {
+        let n = ds.n();
+        self.ds = Some(ds.clone());
+        self.same = (0..n).map(|_| KBest::new(self.k)).collect();
+        self.diff = (0..n).map(|_| KBest::new(self.k)).collect();
+        if self.engine.name() == "native" {
+            for i in 0..n {
+                let ri = ds.row(i);
+                for j in i + 1..n {
+                    let d =
+                        crate::linalg::distance::sq_dist(ri, ds.row(j)).sqrt();
+                    if ds.y[i] == ds.y[j] {
+                        self.same[i].insert(d);
+                        self.same[j].insert(d);
+                    } else {
+                        self.diff[i].insert(d);
+                        self.diff[j].insert(d);
+                    }
+                }
+            }
+        } else {
+            let mut d = vec![0.0; n];
+            for i in 0..n {
+                self.engine.dist_row_sq(ds.row(i), &ds.x, ds.p, &mut d);
+                for v in d.iter_mut() {
+                    *v = v.sqrt();
+                }
+                let (same, diff) =
+                    kbest_split(&d, &ds.y, Some(i), ds.y[i], self.k);
+                self.same[i] = same;
+                self.diff[i] = diff;
+            }
+        }
+    }
+
+    /// Prediction phase: one O(n p) distance row, then O(1) per-point
+    /// provisional-score updates (Figure 1's rule).
+    fn scores(&self, x: &[f64], y: Label) -> Scores {
+        let ds = self.ds();
+        let n = ds.n();
+        let mut d = vec![0.0; n];
+        self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d);
+        for v in d.iter_mut() {
+            *v = v.sqrt();
+        }
+
+        // alpha for the test example: k best same-label (and diff-label)
+        // distances from x to Z.
+        let (t_same, t_diff) = kbest_split(&d, &ds.y, None, y, self.k);
+
+        let mut train = Vec::with_capacity(n);
+        if self.simplified {
+            for i in 0..n {
+                let kb = &self.same[i];
+                let alpha = if ds.y[i] == y {
+                    // test point may enter i's same-label k-NN set
+                    let len = if kb.full() { kb.len() } else { kb.len() + 1 };
+                    knn_sum(len, kb.sum_with(d[i]))
+                } else {
+                    knn_sum(kb.len(), kb.sum())
+                };
+                train.push(alpha);
+            }
+            Scores {
+                train,
+                test: knn_sum(t_same.len(), t_same.sum()),
+            }
+        } else {
+            for i in 0..n {
+                let (s, f) = (&self.same[i], &self.diff[i]);
+                let (ns_len, ns_sum, nd_len, nd_sum) = if ds.y[i] == y {
+                    let len = if s.full() { s.len() } else { s.len() + 1 };
+                    (len, s.sum_with(d[i]), f.len(), f.sum())
+                } else {
+                    let len = if f.full() { f.len() } else { f.len() + 1 };
+                    (s.len(), s.sum(), len, f.sum_with(d[i]))
+                };
+                train.push(knn_ratio(ns_len, ns_sum, nd_len, nd_sum));
+            }
+            Scores {
+                train,
+                test: knn_ratio(
+                    t_same.len(),
+                    t_same.sum(),
+                    t_diff.len(),
+                    t_diff.sum(),
+                ),
+            }
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n())
+    }
+
+    fn n_labels(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n_labels)
+    }
+
+    /// Online increment (§9): O(n p) — one distance row + O(k) inserts.
+    fn learn(&mut self, x: &[f64], y: Label) -> bool {
+        let Some(ds) = self.ds.as_mut() else {
+            return false;
+        };
+        let n = ds.n();
+        let p = ds.p;
+        let mut d = vec![0.0; n];
+        self.engine.dist_row_sq(x, &ds.x, p, &mut d);
+        for v in d.iter_mut() {
+            *v = v.sqrt();
+        }
+        // update existing rows
+        for i in 0..n {
+            if ds.y[i] == y {
+                self.same[i].insert(d[i]);
+            } else {
+                self.diff[i].insert(d[i]);
+            }
+        }
+        // build the new row
+        let (same, diff) = kbest_split(&d, &ds.y, None, y, self.k);
+        self.same.push(same);
+        self.diff.push(diff);
+        ds.push(x, y);
+        true
+    }
+
+    /// Online decrement: remove training index `idx`; rows whose k-best
+    /// sets could contain the removed point are rebuilt.
+    fn unlearn(&mut self, idx: usize) -> bool {
+        let Some(ds) = self.ds.as_mut() else {
+            return false;
+        };
+        if idx >= ds.n() {
+            return false;
+        }
+        let (x_rm, y_rm) = (ds.row(idx).to_vec(), ds.y[idx]);
+        // distances from the removed point to everyone (to test k-best
+        // membership cheaply)
+        let mut d = vec![0.0; ds.n()];
+        self.engine.dist_row_sq(&x_rm, &ds.x, ds.p, &mut d);
+        for v in d.iter_mut() {
+            *v = v.sqrt();
+        }
+        ds.remove(idx);
+        self.same.remove(idx);
+        self.diff.remove(idx);
+        // note: d still indexed by OLD indices; map old j -> new row
+        let stale: Vec<usize> = (0..d.len())
+            .filter(|&j| j != idx)
+            .filter(|&j| {
+                let new_j = if j > idx { j - 1 } else { j };
+                let kb = if self.ds.as_ref().unwrap().y[new_j] == y_rm {
+                    &self.same[new_j]
+                } else {
+                    &self.diff[new_j]
+                };
+                // candidate was possibly among j's k best
+                d[j] <= kb.max() || !kb.full()
+            })
+            .map(|j| if j > idx { j - 1 } else { j })
+            .collect();
+        for i in stale {
+            self.rebuild_row(i);
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------
+// ICP variant
+// ---------------------------------------------------------------------
+
+/// Inductive (k-NN / Simplified k-NN) measure: scores against the proper
+/// training set only.
+pub struct IcpKnn {
+    pub k: usize,
+    pub simplified: bool,
+    proper: Option<Dataset>,
+    engine: Engine,
+}
+
+impl IcpKnn {
+    pub fn new(k: usize, simplified: bool) -> Self {
+        IcpKnn {
+            k,
+            simplified,
+            proper: None,
+            engine: native(),
+        }
+    }
+}
+
+impl IcpMeasure for IcpKnn {
+    fn name(&self) -> String {
+        format!(
+            "icp-{}",
+            if self.simplified { "simplified-knn" } else { "knn" }
+        )
+    }
+
+    fn fit(&mut self, proper: &Dataset) {
+        self.proper = Some(proper.clone());
+    }
+
+    fn score(&self, x: &[f64], y: Label) -> f64 {
+        let ds = self.proper.as_ref().expect("fit first");
+        let mut d = vec![0.0; ds.n()];
+        self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d);
+        for v in d.iter_mut() {
+            *v = v.sqrt();
+        }
+        let (same, diff) = kbest_split(&d, &ds.y, None, y, self.k);
+        if self.simplified {
+            knn_sum(same.len(), same.sum())
+        } else {
+            knn_ratio(same.len(), same.sum(), diff.len(), diff.sum())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::pvalue::p_value;
+    use crate::data::{make_classification, ClassificationSpec};
+
+    fn small_ds(n: usize, seed: u64) -> Dataset {
+        make_classification(
+            &ClassificationSpec {
+                n_samples: n,
+                n_features: 5,
+                n_informative: 3,
+                n_redundant: 1,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn assert_scores_match(a: &Scores, b: &Scores) {
+        assert_eq!(a.train.len(), b.train.len());
+        for (i, (x, y)) in a.train.iter().zip(&b.train).enumerate() {
+            let ok = (x - y).abs() <= 1e-9 * (1.0 + x.abs())
+                || (x.is_infinite() && y.is_infinite());
+            assert!(ok, "train[{i}]: {x} vs {y}");
+        }
+        let ok = (a.test - b.test).abs() <= 1e-9 * (1.0 + a.test.abs())
+            || (a.test.is_infinite() && b.test.is_infinite());
+        assert!(ok, "test: {} vs {}", a.test, b.test);
+    }
+
+    #[test]
+    fn optimized_matches_standard_simplified() {
+        let ds = small_ds(40, 1);
+        let mut std_m = KnnStandard::new(3, true);
+        let mut opt_m = KnnOptimized::new(3, true);
+        std_m.fit(&ds);
+        opt_m.fit(&ds);
+        let probe = small_ds(10, 2);
+        for i in 0..probe.n() {
+            for y in 0..2 {
+                let a = std_m.scores(probe.row(i), y);
+                let b = opt_m.scores(probe.row(i), y);
+                assert_scores_match(&a, &b);
+                assert_eq!(p_value(&a), p_value(&b));
+            }
+        }
+    }
+
+    #[test]
+    fn optimized_matches_standard_full_knn() {
+        let ds = small_ds(40, 3);
+        let mut std_m = KnnStandard::new(5, false);
+        let mut opt_m = KnnOptimized::new(5, false);
+        std_m.fit(&ds);
+        opt_m.fit(&ds);
+        let probe = small_ds(10, 4);
+        for i in 0..probe.n() {
+            for y in 0..2 {
+                let a = std_m.scores(probe.row(i), y);
+                let b = opt_m.scores(probe.row(i), y);
+                assert_scores_match(&a, &b);
+            }
+        }
+    }
+
+    #[test]
+    fn k_larger_than_class_counts() {
+        // k = 15 > class size: exercises under-full KBest paths
+        let ds = small_ds(12, 5);
+        let mut std_m = KnnStandard::new(15, true);
+        let mut opt_m = KnnOptimized::new(15, true);
+        std_m.fit(&ds);
+        opt_m.fit(&ds);
+        let x = ds.row(0).to_vec();
+        for y in 0..2 {
+            assert_scores_match(&std_m.scores(&x, y), &opt_m.scores(&x, y));
+        }
+    }
+
+    #[test]
+    fn duplicate_points_and_ties() {
+        // exact duplicates across labels: zero distances everywhere
+        let x = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 2.0, 2.0];
+        let ds = Dataset::new(x, vec![0, 1, 0, 1], 2, 2);
+        let mut std_m = KnnStandard::new(2, false);
+        let mut opt_m = KnnOptimized::new(2, false);
+        std_m.fit(&ds);
+        opt_m.fit(&ds);
+        for y in 0..2 {
+            let a = std_m.scores(&[1.0, 1.0], y);
+            let b = opt_m.scores(&[1.0, 1.0], y);
+            assert_scores_match(&a, &b);
+        }
+    }
+
+    #[test]
+    fn learn_matches_refit() {
+        let ds = small_ds(30, 7);
+        let probe = small_ds(5, 8);
+        // incrementally learned
+        let mut inc = KnnOptimized::new(3, true);
+        inc.fit(&ds);
+        let mut grown = ds.clone();
+        for i in 0..probe.n() {
+            assert!(inc.learn(probe.row(i), probe.y[i]));
+            grown.push(probe.row(i), probe.y[i]);
+        }
+        // refit from scratch
+        let mut refit = KnnOptimized::new(3, true);
+        refit.fit(&grown);
+        let q = small_ds(3, 9);
+        for i in 0..q.n() {
+            for y in 0..2 {
+                assert_scores_match(
+                    &inc.scores(q.row(i), y),
+                    &refit.scores(q.row(i), y),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unlearn_matches_refit() {
+        let ds = small_ds(30, 10);
+        let mut dec = KnnOptimized::new(3, false);
+        dec.fit(&ds);
+        assert!(dec.unlearn(7));
+        assert!(dec.unlearn(0));
+        let mut shrunk = ds.clone();
+        shrunk.remove(7);
+        shrunk.remove(0);
+        let mut refit = KnnOptimized::new(3, false);
+        refit.fit(&shrunk);
+        let q = small_ds(3, 11);
+        for i in 0..q.n() {
+            for y in 0..2 {
+                assert_scores_match(
+                    &dec.scores(q.row(i), y),
+                    &refit.scores(q.row(i), y),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn icp_knn_scores_sane() {
+        let ds = small_ds(30, 12);
+        let mut icp = IcpKnn::new(3, true);
+        icp.fit(&ds);
+        // a training point scores low for its own label
+        let a_own = icp.score(ds.row(0), ds.y[0]);
+        let a_other = icp.score(ds.row(0), 1 - ds.y[0]);
+        assert!(a_own.is_finite());
+        assert!(a_own < a_other || a_other.is_infinite());
+    }
+}

@@ -1,0 +1,18 @@
+//! Nonconformity measures — every method the paper studies (§3–§6),
+//! each in a *standard* (from-scratch LOO) and an *optimized*
+//! (incremental&decremental) variant, plus the ICP version used as the
+//! computational baseline.
+
+pub mod bootstrap;
+pub mod kde;
+pub mod knn;
+pub mod lssvm;
+pub mod tree;
+
+pub use bootstrap::{
+    BootstrapOptimized, BootstrapParams, BootstrapStandard, IcpRandomForest,
+};
+pub use kde::{IcpKde, KdeOptimized, KdeStandard};
+pub use knn::{IcpKnn, KnnOptimized, KnnStandard};
+pub use lssvm::{FeatureMap, IcpLsSvm, LsSvmModel, LsSvmOptimized, LsSvmStandard};
+pub use tree::{DecisionTree, TreeParams};

@@ -1,0 +1,442 @@
+//! Full k-NN CP regression (paper §8.1).
+//!
+//! Nonconformity for training example i is alpha_i(y~) = |a_i + b_i y~|
+//! where the k-NN regression prediction for x_i may or may not include
+//! the test object x among its k nearest neighbours:
+//!
+//!   x in kNN(x_i):  a_i = y_i - (1/k) sum_{j=1}^{k-1} y_(j)(x_i),  b_i = -1/k
+//!   otherwise:      a_i = y_i - (1/k) sum_{j=1}^{k}   y_(j)(x_i),  b_i = 0
+//!
+//! and the test example has a = -(1/k) sum_{j=1}^{k} y_(j)(x), b = 1.
+//!
+//! * [`KnnRegressorStandard`] — the Papadopoulos et al. (2011) method:
+//!   recomputes every training point's neighbourhood at prediction time;
+//!   O(n^2 + 2n log 2n) per test point.
+//! * [`KnnRegressorOptimized`] — our incremental&decremental version:
+//!   the training phase precomputes each point's k-NN label sums and
+//!   k-th distance (O(n^2) once); prediction only computes the O(n)
+//!   distance row and flips the (a_i, b_i) of points whose k-NN set the
+//!   test object enters — O(2n log 2n) per test point.
+//!
+//! Both produce the same coefficients, hence identical regions — the
+//! exactness test for §8.
+//!
+//! Tie-breaking: neighbours are ordered by (distance, index); the test
+//! object enters x_i's k-NN set iff d(x_i, x) < Delta_i^k strictly.
+//! Both variants share these conventions.
+
+use crate::data::RegressionDataset;
+use crate::linalg::engine::{native, Engine};
+use crate::regression::region::{conformal_region, p_value_at, Region};
+
+/// Per-point neighbour statistics used by both variants.
+#[derive(Clone, Debug)]
+struct NnStats {
+    /// sum of the labels of the k nearest neighbours
+    sum_k: f64,
+    /// sum of the labels of the k-1 nearest neighbours
+    sum_k1: f64,
+    /// distance to the k-th nearest neighbour (inf if fewer than k)
+    delta_k: f64,
+}
+
+/// Compute NnStats for the point with distance row `d` (self at `skip`),
+/// using (distance, index) ordering.
+fn nn_stats(d: &[f64], ys: &[f64], skip: usize, k: usize) -> NnStats {
+    let mut items: Vec<(f64, usize)> = (0..d.len())
+        .filter(|&j| j != skip)
+        .map(|j| (d[j], j))
+        .collect();
+    let k_eff = k.min(items.len());
+    if k_eff == 0 {
+        return NnStats {
+            sum_k: 0.0,
+            sum_k1: 0.0,
+            delta_k: f64::INFINITY,
+        };
+    }
+    items.select_nth_unstable_by(k_eff - 1, |a, b| {
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+    });
+    items.truncate(k_eff);
+    items.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let sum_k: f64 = items.iter().map(|&(_, j)| ys[j]).sum();
+    let sum_k1 = sum_k - ys[items[k_eff - 1].1];
+    let delta_k = if k_eff == k {
+        items[k_eff - 1].0
+    } else {
+        f64::INFINITY
+    };
+    NnStats {
+        sum_k,
+        sum_k1,
+        delta_k,
+    }
+}
+
+/// Coefficients (a_i, b_i) for all training points + (a, b) for the test.
+fn coefficients(
+    stats: &[NnStats],
+    d_test: &[f64],
+    ds: &RegressionDataset,
+    k: usize,
+) -> (Vec<(f64, f64)>, f64, f64) {
+    let kf = k as f64;
+    let n = ds.n();
+    let coefs: Vec<(f64, f64)> = (0..n)
+        .map(|i| {
+            let s = &stats[i];
+            if d_test[i] < s.delta_k {
+                // x enters x_i's k-NN set
+                (ds.y[i] - s.sum_k1 / kf, -1.0 / kf)
+            } else {
+                (ds.y[i] - s.sum_k / kf, 0.0)
+            }
+        })
+        .collect();
+    // test coefficients: k nearest of x in Z
+    let mut items: Vec<(f64, usize)> =
+        d_test.iter().copied().zip(0..n).map(|(d, j)| (d, j)).collect();
+    let k_eff = k.min(n);
+    items.select_nth_unstable_by(k_eff - 1, |a, b| {
+        a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+    });
+    items.truncate(k_eff);
+    let sum: f64 = items.iter().map(|&(_, j)| ds.y[j]).sum();
+    (coefs, -sum / kf, 1.0)
+}
+
+/// The Papadopoulos et al. (2011) full k-NN CP regressor.
+pub struct KnnRegressorStandard {
+    pub k: usize,
+    ds: Option<RegressionDataset>,
+    engine: Engine,
+}
+
+impl KnnRegressorStandard {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        KnnRegressorStandard {
+            k,
+            ds: None,
+            engine: native(),
+        }
+    }
+
+    pub fn fit(&mut self, ds: &RegressionDataset) {
+        self.ds = Some(ds.clone());
+    }
+
+    /// Affine coefficients for one test object — O(n^2) neighbour
+    /// recomputation (this is exactly the term our optimization removes).
+    pub fn coefficients(&self, x: &[f64]) -> (Vec<(f64, f64)>, f64, f64) {
+        let ds = self.ds.as_ref().expect("fit first");
+        let n = ds.n();
+        let mut d_test = vec![0.0; n];
+        self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d_test);
+        for v in d_test.iter_mut() {
+            *v = v.sqrt();
+        }
+        let mut stats = Vec::with_capacity(n);
+        let mut d_i = vec![0.0; n];
+        for i in 0..n {
+            self.engine.dist_row_sq(ds.row(i), &ds.x, ds.p, &mut d_i);
+            for v in d_i.iter_mut() {
+                *v = v.sqrt();
+            }
+            stats.push(nn_stats(&d_i, &ds.y, i, self.k));
+        }
+        coefficients(&stats, &d_test, ds, self.k)
+    }
+
+    pub fn predict_region(&self, x: &[f64], eps: f64) -> Region {
+        let (coefs, a, b) = self.coefficients(x);
+        conformal_region(&coefs, a, b, eps)
+    }
+
+    pub fn p_value(&self, x: &[f64], y: f64) -> f64 {
+        let (coefs, a, b) = self.coefficients(x);
+        p_value_at(&coefs, a, b, y)
+    }
+}
+
+/// Our incremental&decremental optimization of the k-NN CP regressor.
+pub struct KnnRegressorOptimized {
+    pub k: usize,
+    ds: Option<RegressionDataset>,
+    stats: Vec<NnStats>,
+    engine: Engine,
+}
+
+impl KnnRegressorOptimized {
+    pub fn new(k: usize) -> Self {
+        Self::with_engine(k, native())
+    }
+
+    pub fn with_engine(k: usize, engine: Engine) -> Self {
+        assert!(k >= 1);
+        KnnRegressorOptimized {
+            k,
+            ds: None,
+            stats: Vec::new(),
+            engine,
+        }
+    }
+
+    /// Training phase: precompute all neighbour statistics, O(n^2).
+    pub fn fit(&mut self, ds: &RegressionDataset) {
+        let n = ds.n();
+        self.ds = Some(ds.clone());
+        self.stats = Vec::with_capacity(n);
+        let mut d_i = vec![0.0; n];
+        for i in 0..n {
+            self.engine.dist_row_sq(ds.row(i), &ds.x, ds.p, &mut d_i);
+            for v in d_i.iter_mut() {
+                *v = v.sqrt();
+            }
+            self.stats.push(nn_stats(&d_i, &ds.y, i, self.k));
+        }
+    }
+
+    /// Prediction phase: O(n) distance row + O(n log n) sweep.
+    pub fn coefficients(&self, x: &[f64]) -> (Vec<(f64, f64)>, f64, f64) {
+        let ds = self.ds.as_ref().expect("fit first");
+        let mut d_test = vec![0.0; ds.n()];
+        self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d_test);
+        for v in d_test.iter_mut() {
+            *v = v.sqrt();
+        }
+        coefficients(&self.stats, &d_test, ds, self.k)
+    }
+
+    pub fn predict_region(&self, x: &[f64], eps: f64) -> Region {
+        let (coefs, a, b) = self.coefficients(x);
+        conformal_region(&coefs, a, b, eps)
+    }
+
+    pub fn p_value(&self, x: &[f64], y: f64) -> f64 {
+        let (coefs, a, b) = self.coefficients(x);
+        p_value_at(&coefs, a, b, y)
+    }
+
+    /// Online increment (§9): add (x, y) in O(n) + O(k) per affected row.
+    pub fn learn(&mut self, x: &[f64], y: f64) {
+        let Some(ds) = self.ds.as_mut() else { return };
+        let n = ds.n();
+        let mut d = vec![0.0; n];
+        self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d);
+        for v in d.iter_mut() {
+            *v = v.sqrt();
+        }
+        ds.x.extend_from_slice(x);
+        ds.y.push(y);
+        // rows whose k-NN set the new point enters must be recomputed;
+        // underfull rows always change
+        let ds = self.ds.as_ref().unwrap();
+        let mut d_i = vec![0.0; ds.n()];
+        for i in 0..n {
+            if d[i] < self.stats[i].delta_k {
+                self.engine.dist_row_sq(ds.row(i), &ds.x, ds.p, &mut d_i);
+                for v in d_i.iter_mut() {
+                    *v = v.sqrt();
+                }
+                self.stats[i] = nn_stats(&d_i, &ds.y, i, self.k);
+            }
+        }
+        // stats for the new row
+        let mut d_new = vec![0.0; ds.n()];
+        self.engine.dist_row_sq(ds.row(n), &ds.x, ds.p, &mut d_new);
+        for v in d_new.iter_mut() {
+            *v = v.sqrt();
+        }
+        self.stats.push(nn_stats(&d_new, &ds.y, n, self.k));
+    }
+}
+
+/// Inductive k-NN regression baseline (Papadopoulos et al. 2002):
+/// k-NN point prediction from the proper training set, calibration by
+/// absolute residuals, symmetric interval at the (1-eps) quantile.
+pub struct IcpKnnRegressor {
+    pub k: usize,
+    proper: Option<RegressionDataset>,
+    calib: Vec<f64>,
+    engine: Engine,
+}
+
+impl IcpKnnRegressor {
+    pub fn new(k: usize) -> Self {
+        IcpKnnRegressor {
+            k,
+            proper: None,
+            calib: Vec::new(),
+            engine: native(),
+        }
+    }
+
+    /// k-NN point prediction against the proper training set.
+    pub fn point_predict(&self, x: &[f64]) -> f64 {
+        let ds = self.proper.as_ref().expect("fit first");
+        let mut d = vec![0.0; ds.n()];
+        self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d);
+        let mut items: Vec<(f64, usize)> =
+            d.iter().copied().zip(0..ds.n()).collect();
+        let k_eff = self.k.min(items.len());
+        items.select_nth_unstable_by(k_eff - 1, |a, b| {
+            a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+        });
+        items.truncate(k_eff);
+        items.iter().map(|&(_, j)| ds.y[j]).sum::<f64>() / k_eff as f64
+    }
+
+    /// Split-fit: first `t` rows proper, rest calibration.
+    pub fn fit(&mut self, ds: &RegressionDataset, t: usize) {
+        assert!(t >= 1 && t < ds.n());
+        let proper = RegressionDataset::new(
+            ds.x[..t * ds.p].to_vec(),
+            ds.y[..t].to_vec(),
+            ds.p,
+        );
+        self.proper = Some(proper);
+        self.calib = (t..ds.n())
+            .map(|i| (ds.y[i] - self.point_predict(ds.row(i))).abs())
+            .collect();
+        self.calib.sort_unstable_by(|a, b| a.total_cmp(b));
+    }
+
+    /// Symmetric ICP interval.
+    pub fn predict_interval(&self, x: &[f64], eps: f64) -> (f64, f64) {
+        let c = self.calib.len();
+        let yhat = self.point_predict(x);
+        // quantile index: smallest q with (#{alpha_i >= q}+1)/(c+1) <= eps
+        let rank = ((1.0 - eps) * (c + 1) as f64).ceil() as usize;
+        if rank > c {
+            return (f64::NEG_INFINITY, f64::INFINITY);
+        }
+        let q = self.calib[rank - 1];
+        (yhat - q, yhat + q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{make_regression, RegressionSpec, Rng};
+
+    fn ds(n: usize, seed: u64) -> RegressionDataset {
+        make_regression(
+            &RegressionSpec {
+                n_samples: n,
+                n_features: 6,
+                n_informative: 3,
+                noise: 5.0,
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn optimized_coefficients_match_standard() {
+        let d = ds(50, 1);
+        let mut s = KnnRegressorStandard::new(5);
+        let mut o = KnnRegressorOptimized::new(5);
+        s.fit(&d);
+        o.fit(&d);
+        let probe = ds(10, 2);
+        for i in 0..probe.n() {
+            let (ca, aa, ba) = s.coefficients(probe.row(i));
+            let (cb, ab, bb) = o.coefficients(probe.row(i));
+            assert_eq!(ca, cb);
+            assert_eq!((aa, ba), (ab, bb));
+        }
+    }
+
+    #[test]
+    fn regions_match_between_variants() {
+        let d = ds(40, 3);
+        let mut s = KnnRegressorStandard::new(3);
+        let mut o = KnnRegressorOptimized::new(3);
+        s.fit(&d);
+        o.fit(&d);
+        let probe = ds(5, 4);
+        for i in 0..probe.n() {
+            let ra = s.predict_region(probe.row(i), 0.1);
+            let rb = o.predict_region(probe.row(i), 0.1);
+            assert_eq!(ra, rb);
+        }
+    }
+
+    #[test]
+    fn region_covers_plausible_label() {
+        // the true generating value should usually be inside a 90% region
+        let all = ds(120, 5);
+        let mut rng = Rng::seed_from(6);
+        let (train, test) = all.split(100, &mut rng);
+        let mut o = KnnRegressorOptimized::new(5);
+        o.fit(&train);
+        let mut covered = 0;
+        for i in 0..test.n() {
+            if o.predict_region(test.row(i), 0.1).contains(test.y[i]) {
+                covered += 1;
+            }
+        }
+        let rate = covered as f64 / test.n() as f64;
+        assert!(rate >= 0.7, "coverage {rate}");
+    }
+
+    #[test]
+    fn pvalue_of_kth_neighbor_label_reasonable() {
+        let d = ds(30, 7);
+        let mut o = KnnRegressorOptimized::new(3);
+        o.fit(&d);
+        // p-value must be in (0, 1]
+        let p = o.p_value(d.row(0), d.y[0]);
+        assert!(p > 0.0 && p <= 1.0);
+    }
+
+    #[test]
+    fn learn_matches_refit() {
+        let d = ds(30, 8);
+        let extra = ds(5, 9);
+        let mut inc = KnnRegressorOptimized::new(3);
+        inc.fit(&d);
+        let mut grown = d.clone();
+        for i in 0..extra.n() {
+            inc.learn(extra.row(i), extra.y[i]);
+            grown.x.extend_from_slice(extra.row(i));
+            grown.y.push(extra.y[i]);
+        }
+        let mut refit = KnnRegressorOptimized::new(3);
+        refit.fit(&grown);
+        let probe = ds(4, 10);
+        for i in 0..probe.n() {
+            assert_eq!(
+                inc.coefficients(probe.row(i)),
+                refit.coefficients(probe.row(i))
+            );
+        }
+    }
+
+    #[test]
+    fn icp_interval_contains_point_prediction() {
+        let d = ds(100, 11);
+        let mut icp = IcpKnnRegressor::new(5);
+        icp.fit(&d, 50);
+        let probe = ds(5, 12);
+        for i in 0..probe.n() {
+            let (lo, hi) = icp.predict_interval(probe.row(i), 0.1);
+            let yhat = icp.point_predict(probe.row(i));
+            assert!(lo <= yhat && yhat <= hi);
+        }
+    }
+
+    #[test]
+    fn icp_interval_widens_with_confidence() {
+        let d = ds(100, 13);
+        let mut icp = IcpKnnRegressor::new(5);
+        icp.fit(&d, 50);
+        let x = ds(1, 14);
+        let (l90, h90) = icp.predict_interval(x.row(0), 0.1);
+        let (l99, h99) = icp.predict_interval(x.row(0), 0.01);
+        assert!(h99 - l99 >= h90 - l90);
+    }
+}

@@ -1,0 +1,17 @@
+//! Full CP regression (paper §8) and baselines.
+//!
+//! - [`region`] — the exact critical-point sweep shared by all affine-
+//!   score CP regressors;
+//! - [`knn_reg`] — the Papadopoulos et al. (2011) k-NN CP regressor, our
+//!   incremental&decremental optimization of it (§8.1), and the ICP
+//!   regression baseline;
+//! - [`ridge`] — the ridge (RRCM) full CP regressor with incremental
+//!   Sherman–Morrison updates (the §8 "Discussion" extension).
+
+pub mod knn_reg;
+pub mod region;
+pub mod ridge;
+
+pub use knn_reg::{IcpKnnRegressor, KnnRegressorOptimized, KnnRegressorStandard};
+pub use region::{conformal_region, p_value_at, Interval, Region};
+pub use ridge::RidgeCp;

@@ -1,0 +1,329 @@
+//! The critical-point machinery of full CP regression (paper §8).
+//!
+//! Every full-CP regressor here (k-NN, ridge) reduces to nonconformity
+//! scores that are absolute values of affine functions of the candidate
+//! label:  alpha_i(y~) = |a_i + b_i y~|  and  alpha(y~) = |a + b y~|.
+//! The prediction region { y~ : p(y~) > eps } is then computable exactly
+//! by sweeping the O(2n) critical points where the comparison
+//! alpha_i(y~) >= alpha(y~) flips (Papadopoulos et al. 2011;
+//! Nouretdinov et al. 2001), in O(n log n).
+
+/// A closed interval of the real line; endpoints may be +-inf.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Interval {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        Interval { lo, hi }
+    }
+
+    pub fn contains(&self, y: f64) -> bool {
+        self.lo <= y && y <= self.hi
+    }
+
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+/// A prediction region: a finite union of closed intervals (sorted,
+/// disjoint). Boundary resolution is the critical-point grid — the same
+/// granularity as the Papadopoulos et al. algorithm.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Region {
+    pub intervals: Vec<Interval>,
+}
+
+impl Region {
+    pub fn contains(&self, y: f64) -> bool {
+        self.intervals.iter().any(|iv| iv.contains(y))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.intervals.is_empty()
+    }
+
+    /// Convex hull [min lo, max hi] — what's usually reported as "the"
+    /// conformal interval.
+    pub fn hull(&self) -> Option<Interval> {
+        if self.intervals.is_empty() {
+            return None;
+        }
+        Some(Interval::new(
+            self.intervals[0].lo,
+            self.intervals[self.intervals.len() - 1].hi,
+        ))
+    }
+
+    /// Total length (inf if any piece is unbounded).
+    pub fn total_width(&self) -> f64 {
+        self.intervals.iter().map(Interval::width).sum()
+    }
+}
+
+/// The set S_i = { y~ : |a_i + b_i y~| >= |a + b y~| } as a union of at
+/// most two closed intervals (possibly empty / unbounded / all of R).
+///
+/// Derivation: |u| >= |v|  <=>  (u - v)(u + v) >= 0 with
+/// u = a_i + b_i y~, v = a + b y~ — a product of two affine functions
+/// f1 = (a_i - a) + (b_i - b) y~ and f2 = (a_i + a) + (b_i + b) y~.
+pub fn ge_set(a_i: f64, b_i: f64, a: f64, b: f64) -> Vec<Interval> {
+    let (c1, s1) = (a_i - a, b_i - b);
+    let (c2, s2) = (a_i + a, b_i + b);
+    let all = vec![Interval::new(f64::NEG_INFINITY, f64::INFINITY)];
+    match (s1 == 0.0, s2 == 0.0) {
+        (true, true) => {
+            if c1 * c2 >= 0.0 {
+                all
+            } else {
+                vec![]
+            }
+        }
+        (true, false) => half_line_product(c1, c2, s2),
+        (false, true) => half_line_product(c2, c1, s1),
+        (false, false) => {
+            let r1 = -c1 / s1;
+            let r2 = -c2 / s2;
+            let (lo, hi) = if r1 <= r2 { (r1, r2) } else { (r2, r1) };
+            if s1 * s2 < 0.0 {
+                // downward parabola: >= 0 between the roots
+                vec![Interval::new(lo, hi)]
+            } else {
+                // upward parabola: >= 0 outside the roots
+                vec![
+                    Interval::new(f64::NEG_INFINITY, lo),
+                    Interval::new(hi, f64::INFINITY),
+                ]
+            }
+        }
+    }
+}
+
+/// Product (constant c) * (affine c2 + s2 y) >= 0 with s2 != 0.
+fn half_line_product(c: f64, c2: f64, s2: f64) -> Vec<Interval> {
+    let root = -c2 / s2;
+    if c == 0.0 {
+        // product identically 0 -> everywhere
+        return vec![Interval::new(f64::NEG_INFINITY, f64::INFINITY)];
+    }
+    // need sign(affine) == sign(c) (or affine == 0)
+    if (c > 0.0) == (s2 > 0.0) {
+        vec![Interval::new(root, f64::INFINITY)]
+    } else {
+        vec![Interval::new(f64::NEG_INFINITY, root)]
+    }
+}
+
+/// Exact conformal prediction region from affine score coefficients.
+///
+/// `coefs[i] = (a_i, b_i)` for the n training examples; `(a, b)` are the
+/// test example's coefficients; the region is
+/// { y~ : (#{i : alpha_i(y~) >= alpha(y~)} + 1) / (n + 1) > eps }.
+pub fn conformal_region(coefs: &[(f64, f64)], a: f64, b: f64, eps: f64) -> Region {
+    let n = coefs.len();
+    // qualify at count >= need, where count = #{i in S_i}
+    // (count + 1)/(n + 1) > eps  <=>  count > eps (n+1) - 1
+    let need = (eps * (n + 1) as f64 - 1.0).floor() as i64 + 1;
+    let need = need.max(0) as usize;
+
+    // Gather intervals; track how many are (-inf, ...] (active at -inf).
+    #[derive(Clone, Copy)]
+    struct Ev {
+        t: f64,
+        start: bool,
+    }
+    let mut events: Vec<Ev> = Vec::with_capacity(2 * n);
+    let mut active_at_neg_inf = 0usize;
+    for &(a_i, b_i) in coefs {
+        for iv in ge_set(a_i, b_i, a, b) {
+            if iv.lo == f64::NEG_INFINITY {
+                active_at_neg_inf += 1;
+            } else {
+                events.push(Ev {
+                    t: iv.lo,
+                    start: true,
+                });
+            }
+            if iv.hi != f64::INFINITY {
+                events.push(Ev {
+                    t: iv.hi,
+                    start: false,
+                });
+            }
+        }
+    }
+    events.sort_by(|x, y| x.t.total_cmp(&y.t));
+
+    let mut out: Vec<Interval> = Vec::new();
+    let mut cur_start: Option<f64> = None;
+    let mut count = active_at_neg_inf;
+    if count >= need {
+        cur_start = Some(f64::NEG_INFINITY);
+    }
+
+    let mut i = 0usize;
+    while i < events.len() {
+        let t = events[i].t;
+        let seg_count = count; // count on the open segment before t
+        let mut starts = 0usize;
+        let mut ends = 0usize;
+        while i < events.len() && events[i].t == t {
+            if events[i].start {
+                starts += 1;
+            } else {
+                ends += 1;
+            }
+            i += 1;
+        }
+        let at_t = seg_count + starts; // closed intervals: ends still active AT t
+        let after = at_t - ends;
+
+        let q_at = at_t >= need;
+        let q_after = after >= need;
+        match (cur_start.is_some(), q_at, q_after) {
+            (false, true, true) => cur_start = Some(t),
+            (false, true, false) => out.push(Interval::new(t, t)),
+            (true, true, false) | (true, false, false) => {
+                // region closes at t (if q_at) or just before (boundary
+                // resolution is the critical point itself)
+                out.push(Interval::new(cur_start.take().unwrap(), t));
+            }
+            _ => {}
+        }
+        count = after;
+    }
+    if let Some(s) = cur_start {
+        out.push(Interval::new(s, f64::INFINITY));
+    }
+    // merge touching intervals
+    let mut merged: Vec<Interval> = Vec::with_capacity(out.len());
+    for iv in out {
+        match merged.last_mut() {
+            Some(last) if iv.lo <= last.hi => last.hi = last.hi.max(iv.hi),
+            _ => merged.push(iv),
+        }
+    }
+    Region { intervals: merged }
+}
+
+/// Direct O(n) p-value at a single candidate label — the oracle the
+/// sweep is tested against (and the validity-test workhorse).
+pub fn p_value_at(coefs: &[(f64, f64)], a: f64, b: f64, y: f64) -> f64 {
+    let alpha = (a + b * y).abs();
+    let ge = coefs
+        .iter()
+        .filter(|(ai, bi)| (ai + bi * y).abs() >= alpha)
+        .count();
+    (ge + 1) as f64 / (coefs.len() + 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn ge_set_bounded_case() {
+        // b_i = 0, b = 1: |a_i| >= |a + y| -> y in [-a - |a_i|, -a + |a_i|]
+        let s = ge_set(2.0, 0.0, 1.0, 1.0);
+        assert_eq!(s, vec![Interval::new(-3.0, 1.0)]);
+    }
+
+    #[test]
+    fn ge_set_outside_case() {
+        // |2y| >= |1 + y|: f1 = -1 + y (root 1), f2 = 1 + 3y (root -1/3);
+        // slopes (1, 3) same sign -> outside the roots
+        let s = ge_set(0.0, 2.0, 1.0, 1.0);
+        assert_eq!(s.len(), 2);
+        assert!((s[0].hi - (-1.0 / 3.0)).abs() < 1e-12);
+        assert!((s[1].lo - 1.0).abs() < 1e-12);
+    }
+
+    /// Brute-force check of ge_set against direct evaluation.
+    #[test]
+    fn ge_set_matches_pointwise() {
+        let mut rng = Rng::seed_from(1);
+        for _ in 0..500 {
+            let a_i = rng.normal() * 2.0;
+            let b_i = match rng.below(4) {
+                0 => 0.0,
+                1 => -1.0,
+                2 => -0.25,
+                _ => rng.normal(),
+            };
+            let a = rng.normal();
+            let b = if rng.below(5) == 0 { 0.0 } else { 1.0 };
+            let set = ge_set(a_i, b_i, a, b);
+            for step in -40..=40 {
+                let y = step as f64 * 0.25;
+                let want = (a_i + b_i * y).abs() >= (a + b * y).abs();
+                let got = set.iter().any(|iv| iv.contains(y));
+                // boundary fuzz: skip near-equality points
+                let gap = ((a_i + b_i * y).abs() - (a + b * y).abs()).abs();
+                if gap > 1e-9 {
+                    assert_eq!(
+                        got, want,
+                        "a_i={a_i} b_i={b_i} a={a} b={b} y={y} set={set:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn region_matches_pointwise_pvalue() {
+        let mut rng = Rng::seed_from(2);
+        for trial in 0..100 {
+            let n = 5 + rng.below(30);
+            let coefs: Vec<(f64, f64)> = (0..n)
+                .map(|_| {
+                    let a_i = rng.normal() * 3.0;
+                    let b_i = if rng.below(2) == 0 { 0.0 } else { -0.2 };
+                    (a_i, b_i)
+                })
+                .collect();
+            let a = rng.normal();
+            let eps = [0.05, 0.1, 0.2, 0.5][rng.below(4)];
+            let region = conformal_region(&coefs, a, 1.0, eps);
+            for step in -60..=60 {
+                let y = step as f64 * 0.2;
+                let p = p_value_at(&coefs, a, 1.0, y);
+                let want = p > eps;
+                let got = region.contains(y);
+                // skip points within float fuzz of a critical point
+                let near_crit = coefs.iter().any(|&(ai, bi)| {
+                    ((ai + bi * y).abs() - (a + y).abs()).abs() < 1e-9
+                });
+                if !near_crit {
+                    assert_eq!(
+                        got, want,
+                        "trial={trial} y={y} p={p} eps={eps} region={region:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn region_hull_and_width() {
+        let r = Region {
+            intervals: vec![Interval::new(0.0, 1.0), Interval::new(2.0, 3.0)],
+        };
+        assert_eq!(r.hull(), Some(Interval::new(0.0, 3.0)));
+        assert_eq!(r.total_width(), 2.0);
+        assert!(r.contains(2.5));
+        assert!(!r.contains(1.5));
+    }
+
+    #[test]
+    fn eps_one_gives_empty_eps_zero_gives_all() {
+        let coefs = vec![(1.0, 0.0); 9];
+        let r_all = conformal_region(&coefs, 0.0, 1.0, 0.0);
+        assert!(r_all.contains(0.0) && r_all.contains(100.0));
+        let r_none = conformal_region(&coefs, 0.0, 1.0, 0.9999);
+        assert!(r_none.is_empty() || r_none.total_width() < 1e30);
+    }
+}

@@ -1,0 +1,202 @@
+//! Ridge-regression full CP (the Ridge Regression Confidence Machine of
+//! Nouretdinov et al. 2001), optimized with incremental learning — the
+//! §8 "Discussion" extension the paper leaves to future work: applying
+//! the LS-SVM-style incremental update (Sherman–Morrison on the p x p
+//! ridge inverse) removes the per-test-point refactorization.
+//!
+//! With augmented design X~ = [X; x] and targets Y~(y~) = (Y, y~), the
+//! residual vector is affine in y~:
+//!   e(y~) = (I - H) (Y, 0) + (I - H) e_{n+1} y~,  H = X~ M X~^T,
+//!   M = (X~^T X~ + rho I_p)^-1,
+//! so alpha_i(y~) = |A_i + B_i y~| feeds the same critical-point sweep
+//! as k-NN regression ([`crate::regression::region`]).
+//!
+//! Cost per test point: O(p^2) Sherman–Morrison update of M (vs O(p^3)
+//! refactorization for the unoptimized variant) + O(n p) coefficient
+//! assembly + O(n log n) sweep.
+
+use crate::data::RegressionDataset;
+use crate::linalg::{self, dot, Mat};
+use crate::regression::region::{conformal_region, p_value_at, Region};
+
+/// Full CP ridge regressor.
+pub struct RidgeCp {
+    pub rho: f64,
+    ds: Option<RegressionDataset>,
+    /// (X^T X + rho I)^-1 over the training set (updated per test point
+    /// via Sherman–Morrison, never refactorized)
+    m0: Option<Mat>,
+    /// X^T Y over the training set
+    xty: Vec<f64>,
+}
+
+impl RidgeCp {
+    pub fn new(rho: f64) -> Self {
+        RidgeCp {
+            rho,
+            ds: None,
+            m0: None,
+            xty: Vec::new(),
+        }
+    }
+
+    /// O(n p^2 + p^3) one-off training.
+    pub fn fit(&mut self, ds: &RegressionDataset) {
+        let p = ds.p;
+        let x = Mat {
+            data: ds.x.clone(),
+            rows: ds.n(),
+            cols: p,
+        };
+        let mut g = x.gram();
+        g.add_diag(self.rho);
+        self.m0 = Some(linalg::spd_inverse(&g).expect("ridge Gram SPD"));
+        self.xty = x.tmatvec(&ds.y);
+        self.ds = Some(ds.clone());
+    }
+
+    /// Affine residual coefficients for test object `x`:
+    /// returns (per-training (A_i, B_i), A_test, B_test).
+    pub fn coefficients(&self, x: &[f64]) -> (Vec<(f64, f64)>, f64, f64) {
+        let ds = self.ds.as_ref().expect("fit first");
+        let m0 = self.m0.as_ref().unwrap();
+        let n = ds.n();
+
+        // Sherman–Morrison: M = (G0 + x x^T)^-1 = M0 - M0 x x^T M0 / (1 + x^T M0 x)
+        let m0x = m0.matvec(x);
+        let denom = 1.0 + dot(x, &m0x);
+        // w_a = M (X^T Y)  [note X~^T (Y,0) = X^T Y]
+        // Apply SM without materializing M: M v = M0 v - m0x (m0x . v)/denom
+        let mv = |v: &[f64]| -> Vec<f64> {
+            let m0v = m0.matvec(v);
+            let corr = dot(&m0x, v) / denom;
+            m0v.iter().zip(&m0x).map(|(a, b)| a - b * corr).collect()
+        };
+        let w_a = mv(&self.xty);
+        let w_b = mv(x);
+
+        // A_i = y_i - x_i . w_a ; B_i = -x_i . w_b (i <= n)
+        let coefs: Vec<(f64, f64)> = (0..n)
+            .map(|i| {
+                let xi = ds.row(i);
+                (ds.y[i] - dot(xi, &w_a), -dot(xi, &w_b))
+            })
+            .collect();
+        // test row: A = -x . w_a ; B = 1 - x . w_b
+        let a = -dot(x, &w_a);
+        let b = 1.0 - dot(x, &w_b);
+        (coefs, a, b)
+    }
+
+    pub fn predict_region(&self, x: &[f64], eps: f64) -> Region {
+        let (coefs, a, b) = self.coefficients(x);
+        conformal_region(&coefs, a, b, eps)
+    }
+
+    pub fn p_value(&self, x: &[f64], y: f64) -> f64 {
+        let (coefs, a, b) = self.coefficients(x);
+        p_value_at(&coefs, a, b, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{make_regression, RegressionSpec, Rng};
+
+    fn ds(n: usize, seed: u64) -> RegressionDataset {
+        make_regression(
+            &RegressionSpec {
+                n_samples: n,
+                n_features: 5,
+                n_informative: 5,
+                noise: 2.0,
+            },
+            seed,
+        )
+    }
+
+    /// Oracle: recompute the residual coefficients by explicitly
+    /// building the (n+1)x(n+1) hat matrix.
+    fn oracle_coefs(
+        ds: &RegressionDataset,
+        x: &[f64],
+        rho: f64,
+    ) -> (Vec<(f64, f64)>, f64, f64) {
+        let n = ds.n();
+        let p = ds.p;
+        let mut xa = Mat::zeros(n + 1, p);
+        xa.data[..n * p].copy_from_slice(&ds.x);
+        xa.row_mut(n).copy_from_slice(x);
+        let mut g = xa.gram();
+        g.add_diag(rho);
+        let minv = linalg::spd_inverse(&g).unwrap();
+        // A = (Y,0) - Xa M Xa^T (Y,0) ; B = e_n+1 - Xa M Xa^T e_n+1
+        let mut y0 = ds.y.clone();
+        y0.push(0.0);
+        let w_a = minv.matvec(&xa.tmatvec(&y0));
+        let mut e = vec![0.0; n + 1];
+        e[n] = 1.0;
+        let w_b = minv.matvec(&xa.tmatvec(&e));
+        let coefs: Vec<(f64, f64)> = (0..n)
+            .map(|i| {
+                (
+                    y0[i] - dot(xa.row(i), &w_a),
+                    e[i] - dot(xa.row(i), &w_b),
+                )
+            })
+            .collect();
+        let a = y0[n] - dot(xa.row(n), &w_a);
+        let b = e[n] - dot(xa.row(n), &w_b);
+        (coefs, a, b)
+    }
+
+    #[test]
+    fn sherman_morrison_matches_oracle() {
+        let d = ds(30, 1);
+        let mut r = RidgeCp::new(1.0);
+        r.fit(&d);
+        let probe = ds(5, 2);
+        for i in 0..probe.n() {
+            let (got, ga, gb) = r.coefficients(probe.row(i));
+            let (want, wa, wb) = oracle_coefs(&d, probe.row(i), 1.0);
+            for ((g1, g2), (w1, w2)) in got.iter().zip(&want) {
+                assert!((g1 - w1).abs() < 1e-8, "{g1} vs {w1}");
+                assert!((g2 - w2).abs() < 1e-8, "{g2} vs {w2}");
+            }
+            assert!((ga - wa).abs() < 1e-8);
+            assert!((gb - wb).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn region_covers_true_values() {
+        let all = ds(150, 3);
+        let mut rng = Rng::seed_from(4);
+        let (train, test) = all.split(120, &mut rng);
+        let mut r = RidgeCp::new(1.0);
+        r.fit(&train);
+        let mut covered = 0;
+        for i in 0..test.n() {
+            if r.predict_region(test.row(i), 0.1).contains(test.y[i]) {
+                covered += 1;
+            }
+        }
+        let rate = covered as f64 / test.n() as f64;
+        assert!(rate >= 0.75, "coverage {rate}");
+    }
+
+    #[test]
+    fn region_is_interval_for_well_posed_ridge() {
+        // for ridge with B ~ small and b ~ 1, the region is one interval
+        let d = ds(60, 5);
+        let mut r = RidgeCp::new(1.0);
+        r.fit(&d);
+        let probe = ds(3, 6);
+        for i in 0..probe.n() {
+            let region = r.predict_region(probe.row(i), 0.1);
+            assert!(!region.is_empty());
+            assert!(region.intervals.len() <= 2, "{region:?}");
+        }
+    }
+}

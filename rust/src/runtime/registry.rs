@@ -1,0 +1,136 @@
+//! Artifact manifest + shape-bucket registry.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing
+//! every AOT HLO module (name, file, argument shapes). This module
+//! parses it (in-tree JSON) and answers "which padded bucket serves a
+//! request of n rows x p features".
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Row-count buckets compiled by aot.py (ascending).
+pub const ROW_BUCKETS: [usize; 4] = [256, 1024, 4096, 16384];
+/// Feature-dim buckets compiled by aot.py (ascending).
+pub const P_BUCKETS: [usize; 2] = [32, 784];
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    /// argument shapes as listed in the manifest
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = std::path::Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let Json::Obj(map) = root else {
+            bail!("manifest root must be an object");
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in map {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("{name}: missing file"))?
+                .to_string();
+            let arg_shapes = entry
+                .get("args")
+                .and_then(Json::as_arr)
+                .map(|args| {
+                    args.iter()
+                        .filter_map(|a| a.get("shape"))
+                        .filter_map(Json::as_arr)
+                        .map(|dims| {
+                            dims.iter().filter_map(Json::as_usize).collect()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(name, ArtifactInfo { file, arg_shapes });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn file_for(&self, name: &str) -> Option<&str> {
+        self.artifacts.get(name).map(|a| a.file.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// Smallest compiled bucket covering (n, p), if any.
+    pub fn bucket(&self, n: usize, p: usize) -> Result<(usize, usize)> {
+        let p_pad = P_BUCKETS
+            .iter()
+            .copied()
+            .find(|&b| p <= b)
+            .with_context(|| format!("feature dim {p} exceeds every bucket"))?;
+        let n_pad = ROW_BUCKETS
+            .iter()
+            .copied()
+            .find(|&b| n <= b)
+            .with_context(|| format!("row count {n} exceeds every bucket"))?;
+        Ok((n_pad, p_pad))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "dist_row_n256_p32": {
+            "file": "dist_row_n256_p32.hlo.txt",
+            "args": [
+                {"shape": [1, 32], "dtype": "float32"},
+                {"shape": [256, 32], "dtype": "float32"}
+            ],
+            "sha256": "abc", "bytes": 100
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(
+            m.file_for("dist_row_n256_p32"),
+            Some("dist_row_n256_p32.hlo.txt")
+        );
+        let a = &m.artifacts["dist_row_n256_p32"];
+        assert_eq!(a.arg_shapes, vec![vec![1, 32], vec![256, 32]]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::default();
+        assert_eq!(m.bucket(10, 30).unwrap(), (256, 32));
+        assert_eq!(m.bucket(256, 32).unwrap(), (256, 32));
+        assert_eq!(m.bucket(257, 33).unwrap(), (1024, 784));
+        assert_eq!(m.bucket(16384, 784).unwrap(), (16384, 784));
+        assert!(m.bucket(16385, 30).is_err());
+        assert!(m.bucket(10, 1000).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree utilities replacing unavailable third-party crates in the
+//! offline build environment: a TOML-subset config parser and a JSON
+//! codec for the coordinator wire protocol.
+
+pub mod json;
+pub mod toml_lite;
+
+pub use json::Json;

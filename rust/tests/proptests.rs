@@ -1,0 +1,270 @@
+//! Property-based tests with an in-tree generator + shrinking harness
+//! (the offline environment ships no proptest crate). `check` runs a
+//! property over N random cases; on failure it greedily shrinks n, p,
+//! and k before reporting, so failures are minimal-ish and the failing
+//! seed is printed for replay.
+
+use exact_cp::config::{MeasureConfig, MeasureKind};
+use exact_cp::coordinator::factory::{build_measure, build_standard_measure};
+use exact_cp::cp::pvalue::p_value;
+use exact_cp::data::{make_classification, ClassificationSpec, Dataset, Rng};
+use exact_cp::linalg::select::KBest;
+use exact_cp::regression::{conformal_region, p_value_at};
+
+/// One randomized case of the measure-exactness property.
+#[derive(Clone, Copy, Debug)]
+struct Case {
+    n: usize,
+    p: usize,
+    k: usize,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    Case {
+        n: 8 + rng.below(50),
+        p: 1 + rng.below(8),
+        k: 1 + rng.below(8),
+        seed: rng.next_u64() % 100_000,
+    }
+}
+
+fn shrink(case: Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    if case.n > 8 {
+        out.push(Case {
+            n: (case.n / 2).max(8),
+            ..case
+        });
+    }
+    if case.p > 1 {
+        out.push(Case {
+            p: case.p / 2,
+            ..case
+        });
+    }
+    if case.k > 1 {
+        out.push(Case {
+            k: case.k / 2,
+            ..case
+        });
+    }
+    out
+}
+
+fn check(name: &str, cases: usize, prop: impl Fn(Case) -> bool) {
+    let mut rng = Rng::seed_from(0xC0FFEE);
+    for _ in 0..cases {
+        let case = gen_case(&mut rng);
+        if !prop(case) {
+            // greedy shrink
+            let mut minimal = case;
+            loop {
+                let mut shrunk = false;
+                for cand in shrink(minimal) {
+                    if !prop(cand) {
+                        minimal = cand;
+                        shrunk = true;
+                        break;
+                    }
+                }
+                if !shrunk {
+                    break;
+                }
+            }
+            panic!("property {name} failed; minimal case: {minimal:?}");
+        }
+    }
+}
+
+fn dataset(c: Case) -> Dataset {
+    make_classification(
+        &ClassificationSpec {
+            n_samples: c.n,
+            n_features: c.p,
+            n_informative: c.p.min(3),
+            n_redundant: 0,
+            ..Default::default()
+        },
+        c.seed,
+    )
+}
+
+#[test]
+fn prop_optimized_equals_standard_nn_family() {
+    check("nn-exactness", 40, |c| {
+        let train = dataset(c);
+        let probe = dataset(Case {
+            n: 8,
+            seed: c.seed + 1,
+            ..c
+        });
+        let cfg = MeasureConfig {
+            k: c.k,
+            ..Default::default()
+        };
+        for kind in [MeasureKind::SimplifiedKnn, MeasureKind::Knn] {
+            let mut s = build_standard_measure(kind, &cfg);
+            let mut o = build_measure(kind, &cfg, None);
+            s.fit(&train);
+            o.fit(&train);
+            for i in 0..3 {
+                for y in 0..train.n_labels {
+                    if p_value(&s.scores(probe.row(i), y))
+                        != p_value(&o.scores(probe.row(i), y))
+                    {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_pvalues_in_valid_range() {
+    // p in [1/(n+1), 1] for every measure and candidate label
+    check("pvalue-range", 30, |c| {
+        let train = dataset(c);
+        let probe = dataset(Case {
+            n: 4,
+            seed: c.seed + 2,
+            ..c
+        });
+        let cfg = MeasureConfig {
+            k: c.k,
+            b: 4,
+            ..Default::default()
+        };
+        for kind in [
+            MeasureKind::SimplifiedKnn,
+            MeasureKind::Kde,
+            MeasureKind::RandomForest,
+        ] {
+            let mut m = build_measure(kind, &cfg, None);
+            m.fit(&train);
+            let lo = 1.0 / (train.n() + 1) as f64;
+            for i in 0..2 {
+                for y in 0..train.n_labels {
+                    let p = p_value(&m.scores(probe.row(i), y));
+                    if !(lo - 1e-12..=1.0 + 1e-12).contains(&p) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_learn_unlearn_roundtrip_is_identity() {
+    // learning a point then unlearning it restores all p-values
+    check("learn-unlearn-identity", 25, |c| {
+        let train = dataset(c);
+        let probe = dataset(Case {
+            n: 3,
+            seed: c.seed + 3,
+            ..c
+        });
+        let cfg = MeasureConfig {
+            k: c.k,
+            ..Default::default()
+        };
+        for kind in [MeasureKind::SimplifiedKnn, MeasureKind::Kde] {
+            let mut m = build_measure(kind, &cfg, None);
+            m.fit(&train);
+            let before: Vec<f64> = (0..probe.n())
+                .flat_map(|i| {
+                    (0..train.n_labels)
+                        .map(|y| p_value(&m.scores(probe.row(i), y)))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            let x_new = probe.row(0).to_vec();
+            if !m.learn(&x_new, 0) || !m.unlearn(train.n()) {
+                return false;
+            }
+            let after: Vec<f64> = (0..probe.n())
+                .flat_map(|i| {
+                    (0..train.n_labels)
+                        .map(|y| p_value(&m.scores(probe.row(i), y)))
+                        .collect::<Vec<_>>()
+                })
+                .collect();
+            if before
+                .iter()
+                .zip(&after)
+                .any(|(a, b)| (a - b).abs() > 1e-9)
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_kbest_invariants() {
+    // KBest is always sorted, bounded by k, sum-consistent
+    let mut rng = Rng::seed_from(0xBEEF);
+    for _ in 0..200 {
+        let k = 1 + rng.below(10);
+        let mut kb = KBest::new(k);
+        let mut all: Vec<f64> = Vec::new();
+        for _ in 0..rng.below(40) {
+            let v = rng.f64() * 100.0;
+            kb.insert(v);
+            all.push(v);
+        }
+        assert!(kb.len() <= k);
+        let vals = kb.values();
+        assert!(vals.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        let sum: f64 = vals.iter().sum();
+        assert!((kb.sum() - sum).abs() < 1e-9, "sum consistent");
+        all.sort_by(|a, b| a.total_cmp(b));
+        let want: Vec<f64> = all.into_iter().take(k).collect();
+        assert_eq!(vals, &want[..], "holds the k smallest");
+    }
+}
+
+#[test]
+fn prop_region_sweep_equals_direct_pvalue() {
+    // conformal_region == pointwise p_value_at thresholding, on random
+    // affine-coefficient systems (away from critical points)
+    let mut rng = Rng::seed_from(0xABCD);
+    for _ in 0..60 {
+        let n = 4 + rng.below(40);
+        let coefs: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                (
+                    rng.normal() * 4.0,
+                    match rng.below(3) {
+                        0 => 0.0,
+                        1 => -1.0 / (1.0 + rng.below(5) as f64),
+                        _ => rng.normal() * 0.5,
+                    },
+                )
+            })
+            .collect();
+        let a = rng.normal() * 2.0;
+        let eps = 0.02 + rng.f64() * 0.6;
+        let region = conformal_region(&coefs, a, 1.0, eps);
+        for _ in 0..30 {
+            let y = rng.normal() * 8.0;
+            let near_crit = coefs
+                .iter()
+                .any(|&(ai, bi)| ((ai + bi * y).abs() - (a + y).abs()).abs() < 1e-7);
+            if near_crit {
+                continue;
+            }
+            let want = p_value_at(&coefs, a, 1.0, y) > eps;
+            assert_eq!(
+                region.contains(y),
+                want,
+                "n={n} a={a} eps={eps} y={y} region={region:?}"
+            );
+        }
+    }
+}

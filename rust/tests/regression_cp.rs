@@ -1,0 +1,145 @@
+//! Integration tests for full CP regression (§8): cross-method
+//! behaviour, ridge vs k-NN, ICP comparisons, and the online extension.
+
+use exact_cp::data::{make_regression, RegressionDataset, RegressionSpec, Rng};
+use exact_cp::regression::{
+    IcpKnnRegressor, KnnRegressorOptimized, KnnRegressorStandard, RidgeCp,
+};
+
+fn dataset(n: usize, noise: f64, seed: u64) -> RegressionDataset {
+    make_regression(
+        &RegressionSpec {
+            n_samples: n,
+            n_features: 10,
+            n_informative: 5,
+            noise,
+        },
+        seed,
+    )
+}
+
+#[test]
+fn ridge_beats_knn_on_linear_data() {
+    // the generating model is linear, so ridge regions should be much
+    // tighter than k-NN regions at the same eps
+    let all = dataset(220, 5.0, 1);
+    let mut rng = Rng::seed_from(2);
+    let (train, test) = all.split(200, &mut rng);
+    let mut ridge = RidgeCp::new(1.0);
+    ridge.fit(&train);
+    let mut knn = KnnRegressorOptimized::new(5);
+    knn.fit(&train);
+    let (mut w_ridge, mut w_knn) = (0.0, 0.0);
+    for i in 0..test.n() {
+        w_ridge += ridge
+            .predict_region(test.row(i), 0.1)
+            .hull()
+            .map(|h| h.width())
+            .unwrap_or(f64::INFINITY);
+        w_knn += knn
+            .predict_region(test.row(i), 0.1)
+            .hull()
+            .map(|h| h.width())
+            .unwrap_or(f64::INFINITY);
+    }
+    assert!(
+        w_ridge < w_knn,
+        "ridge total width {w_ridge} should beat knn {w_knn} on linear data"
+    );
+}
+
+#[test]
+fn full_cp_interval_tighter_or_similar_to_icp() {
+    // the paper: ICP has strictly weaker statistical power in regression
+    // (Papadopoulos et al. 2011); full CP should not be (much) wider.
+    let all = dataset(240, 20.0, 3);
+    let mut rng = Rng::seed_from(4);
+    let (train, test) = all.split(200, &mut rng);
+    let mut full = KnnRegressorOptimized::new(5);
+    full.fit(&train);
+    let mut icp = IcpKnnRegressor::new(5);
+    icp.fit(&train, 100);
+    let (mut w_full, mut w_icp) = (0.0, 0.0);
+    for i in 0..test.n() {
+        w_full += full
+            .predict_region(test.row(i), 0.2)
+            .hull()
+            .map(|h| h.width())
+            .unwrap_or(f64::INFINITY);
+        let (lo, hi) = icp.predict_interval(test.row(i), 0.2);
+        w_icp += hi - lo;
+    }
+    assert!(
+        w_full <= w_icp * 1.5,
+        "full CP width {w_full} should be comparable to ICP {w_icp}"
+    );
+}
+
+#[test]
+fn narrower_region_at_larger_eps() {
+    let all = dataset(150, 10.0, 5);
+    let mut rng = Rng::seed_from(6);
+    let (train, test) = all.split(130, &mut rng);
+    let mut m = KnnRegressorOptimized::new(5);
+    m.fit(&train);
+    for i in 0..5 {
+        let w10 = m
+            .predict_region(test.row(i), 0.1)
+            .hull()
+            .map(|h| h.width())
+            .unwrap_or(f64::INFINITY);
+        let w30 = m
+            .predict_region(test.row(i), 0.3)
+            .hull()
+            .map(|h| h.width())
+            .unwrap_or(f64::INFINITY);
+        assert!(
+            w30 <= w10 + 1e-9,
+            "region must shrink as eps grows: {w10} -> {w30}"
+        );
+    }
+}
+
+#[test]
+fn online_learning_keeps_regions_exact() {
+    // stream half the data via learn(); regions must equal a fresh fit
+    let all = dataset(80, 8.0, 7);
+    let first = RegressionDataset::new(
+        all.x[..40 * all.p].to_vec(),
+        all.y[..40].to_vec(),
+        all.p,
+    );
+    let mut inc = KnnRegressorOptimized::new(4);
+    inc.fit(&first);
+    for i in 40..80 {
+        inc.learn(all.row(i), all.y[i]);
+    }
+    let mut fresh = KnnRegressorOptimized::new(4);
+    fresh.fit(&all);
+    let probe = dataset(5, 8.0, 8);
+    for i in 0..probe.n() {
+        assert_eq!(
+            inc.predict_region(probe.row(i), 0.1),
+            fresh.predict_region(probe.row(i), 0.1)
+        );
+    }
+}
+
+#[test]
+fn standard_and_optimized_pvalues_agree_on_probe_labels() {
+    let train = dataset(60, 15.0, 9);
+    let probe = dataset(5, 15.0, 10);
+    let mut s = KnnRegressorStandard::new(3);
+    let mut o = KnnRegressorOptimized::new(3);
+    s.fit(&train);
+    o.fit(&train);
+    for i in 0..probe.n() {
+        for y in [-100.0, 0.0, probe.y[i], 500.0] {
+            assert_eq!(
+                s.p_value(probe.row(i), y),
+                o.p_value(probe.row(i), y),
+                "i={i} y={y}"
+            );
+        }
+    }
+}

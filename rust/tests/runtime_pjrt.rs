@@ -1,0 +1,149 @@
+//! Integration tests for the AOT bridge: Rust loads the HLO artifacts
+//! produced by `make artifacts` (JAX/Pallas, interpret mode) and checks
+//! the PJRT-executed numerics against the native Rust implementations.
+//!
+//! These tests require `artifacts/` to exist; they are skipped (with a
+//! loud message) when it does not, so `cargo test` works pre-`make`.
+
+use exact_cp::cp::measure::CpMeasure;
+use exact_cp::data::{make_classification, ClassificationSpec, Rng};
+use exact_cp::linalg::engine::{DistEngine, NativeEngine};
+use exact_cp::measures::knn::KnnOptimized;
+use exact_cp::runtime::{PjrtEngine, PjrtRuntime};
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<PjrtRuntime>> {
+    match PjrtRuntime::open("artifacts") {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not available ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn rand_rows(n: usize, p: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n * p).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn dist_row_matches_native() {
+    let Some(rt) = runtime() else { return };
+    for (n, p) in [(10, 5), (200, 30), (256, 32), (300, 30), (1024, 32)] {
+        let rows = rand_rows(n, p, 1);
+        let x = rand_rows(1, p, 2);
+        let got = rt.dist_row_sq_f32(&x, &rows, p).unwrap();
+        let mut want = vec![0.0; n];
+        NativeEngine.dist_row_sq(&x, &rows, p, &mut want);
+        assert_eq!(got.len(), n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() < 1e-3 * (1.0 + w.abs()),
+                "n={n} p={p}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kde_row_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (n, p, h2) = (100, 30, 2.0);
+    let rows = rand_rows(n, p, 3);
+    let x = rand_rows(1, p, 4);
+    let got = rt.kde_row_f32(&x, &rows, p, h2).unwrap();
+    let mut want = vec![0.0; n];
+    NativeEngine.kde_row(&x, &rows, p, h2, &mut want);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn knn_update_kernel_matches_rule() {
+    let Some(rt) = runtime() else { return };
+    let (n, p, k) = (120, 30, 5usize);
+    let rows = rand_rows(n, p, 5);
+    let x = rand_rows(1, p, 6);
+    // native distances for the oracle
+    let mut d2 = vec![0.0; n];
+    NativeEngine.dist_row_sq(&x, &rows, p, &mut d2);
+    let d: Vec<f64> = d2.iter().map(|v| v.sqrt()).collect();
+    let mut rng = Rng::seed_from(7);
+    let alpha_prov: Vec<f64> = (0..n).map(|_| rng.f64() * 3.0).collect();
+    let delta_k: Vec<f64> = (0..n).map(|_| rng.f64() * 2.0).collect();
+    let same: Vec<f64> = (0..n).map(|_| (rng.below(2)) as f64).collect();
+    let _ = k;
+    let got = rt
+        .knn_update_f32(&x, &rows, p, &alpha_prov, &delta_k, &same)
+        .unwrap();
+    for i in 0..n {
+        let want = if same[i] > 0.5 && d[i] < delta_k[i] {
+            alpha_prov[i] - delta_k[i] + d[i]
+        } else {
+            alpha_prov[i]
+        };
+        assert!(
+            (got[i] - want).abs() < 1e-3,
+            "i={i}: {} vs {want} (d={} delta={})",
+            got[i],
+            d[i],
+            delta_k[i]
+        );
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = runtime() else { return };
+    let rows = rand_rows(50, 30, 8);
+    let x = rand_rows(1, 30, 9);
+    assert_eq!(rt.compiled_count(), 0);
+    rt.dist_row_sq_f32(&x, &rows, 30).unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+    rt.dist_row_sq_f32(&x, &rows, 30).unwrap();
+    assert_eq!(rt.compiled_count(), 1, "second call must hit the cache");
+}
+
+#[test]
+fn optimized_knn_cp_agrees_across_backends() {
+    // The same optimized algorithm, native vs PJRT distance engine:
+    // p-values agree (f32 boundary => tolerate tie flips on ~1e-6 gaps).
+    let Some(rt) = runtime() else { return };
+    let ds = make_classification(
+        &ClassificationSpec {
+            n_samples: 60,
+            ..Default::default()
+        },
+        11,
+    );
+    let mut native = KnnOptimized::new(5, true);
+    let mut pjrt = KnnOptimized::with_engine(
+        5,
+        true,
+        Arc::new(PjrtEngine::new(rt)),
+    );
+    native.fit(&ds);
+    pjrt.fit(&ds);
+    let probe = make_classification(
+        &ClassificationSpec {
+            n_samples: 8,
+            ..Default::default()
+        },
+        12,
+    );
+    for i in 0..probe.n() {
+        for y in 0..2 {
+            let a = native.scores(probe.row(i), y);
+            let b = pjrt.scores(probe.row(i), y);
+            for (u, v) in a.train.iter().zip(&b.train) {
+                let both_inf = u.is_infinite() && v.is_infinite();
+                assert!(
+                    both_inf || (u - v).abs() < 1e-3 * (1.0 + u.abs()),
+                    "{u} vs {v}"
+                );
+            }
+        }
+    }
+}

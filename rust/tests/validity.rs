@@ -1,0 +1,188 @@
+//! Statistical validity tests: the CP guarantee
+//! Pr(y not in Gamma^eps) <= eps under exchangeability (paper §2), for
+//! every measure family, plus p-value uniformity and the classification
+//! quality expected on separable data.
+
+use exact_cp::config::{MeasureConfig, MeasureKind};
+use exact_cp::coordinator::factory::build_measure;
+use exact_cp::cp::icp::Icp;
+use exact_cp::cp::metrics::{avg_set_size, coverage};
+use exact_cp::cp::pvalue::p_value;
+use exact_cp::data::{make_classification, ClassificationSpec, Rng};
+use exact_cp::measures::IcpKnn;
+use exact_cp::regression::KnnRegressorOptimized;
+
+fn p_matrix(
+    kind: MeasureKind,
+    cfg: &MeasureConfig,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let all = make_classification(
+        &ClassificationSpec {
+            n_samples: n_train + n_test,
+            n_features: 10,
+            n_informative: 4,
+            n_redundant: 2,
+            ..Default::default()
+        },
+        seed,
+    );
+    let mut rng = Rng::seed_from(seed + 1);
+    let (train, test) = all.split(n_train, &mut rng);
+    let mut m = build_measure(kind, cfg, None);
+    m.fit(&train);
+    let pm: Vec<Vec<f64>> = (0..test.n())
+        .map(|i| {
+            (0..train.n_labels)
+                .map(|y| p_value(&m.scores(test.row(i), y)))
+                .collect()
+        })
+        .collect();
+    (pm, test.y.clone())
+}
+
+/// Empirical coverage must be >= 1 - eps - fuzz for each measure.
+#[test]
+fn coverage_guarantee_all_measures() {
+    let cfg = MeasureConfig {
+        k: 5,
+        b: 10,
+        ..Default::default()
+    };
+    for kind in [
+        MeasureKind::SimplifiedKnn,
+        MeasureKind::Knn,
+        MeasureKind::Kde,
+        MeasureKind::LsSvm,
+        MeasureKind::RandomForest,
+    ] {
+        let (pm, truth) = p_matrix(kind, &cfg, 150, 100, 7);
+        for eps in [0.05, 0.1, 0.2] {
+            let cov = coverage(&pm, &truth, eps);
+            // binomial fuzz at n_test=100: 3 sigma ~ 0.12 at eps=0.2
+            assert!(
+                cov >= 1.0 - eps - 0.13,
+                "{kind:?} eps={eps}: coverage {cov}"
+            );
+        }
+    }
+}
+
+/// Prediction sets must be informative (avg size well below |Y|) on
+/// separable data for the NN-family measures.
+#[test]
+fn sets_are_informative() {
+    let cfg = MeasureConfig {
+        k: 5,
+        ..Default::default()
+    };
+    let (pm, _) = p_matrix(MeasureKind::SimplifiedKnn, &cfg, 200, 80, 9);
+    let size = avg_set_size(&pm, 0.2);
+    assert!(size < 1.7, "avg set size {size} at eps=0.2");
+}
+
+/// True-label p-values are ~uniform under exchangeability: the CDF at q
+/// should be ~q.
+#[test]
+fn true_label_pvalues_uniform() {
+    let cfg = MeasureConfig {
+        k: 5,
+        ..Default::default()
+    };
+    let (pm, truth) = p_matrix(MeasureKind::Knn, &cfg, 150, 150, 11);
+    let ps: Vec<f64> = pm.iter().zip(&truth).map(|(row, &y)| row[y]).collect();
+    for q in [0.1, 0.25, 0.5, 0.75] {
+        let frac = ps.iter().filter(|&&p| p <= q).count() as f64 / ps.len() as f64;
+        assert!(
+            (frac - q).abs() < 0.12,
+            "P(p <= {q}) = {frac}, expected ~{q}"
+        );
+    }
+}
+
+/// ICP also has valid coverage (Algorithm 2).
+#[test]
+fn icp_coverage_guarantee() {
+    let all = make_classification(
+        &ClassificationSpec {
+            n_samples: 300,
+            ..Default::default()
+        },
+        13,
+    );
+    let mut rng = Rng::seed_from(14);
+    let (train, test) = all.split(200, &mut rng);
+    let icp = Icp::calibrate(IcpKnn::new(5, true), &train, 100);
+    let pm: Vec<Vec<f64>> = (0..test.n()).map(|i| icp.p_values(test.row(i))).collect();
+    for eps in [0.1, 0.2] {
+        let cov = coverage(&pm, &test.y, eps);
+        assert!(cov >= 1.0 - eps - 0.13, "eps={eps}: {cov}");
+    }
+}
+
+/// Full CP is at least as statistically efficient as ICP here: smaller
+/// or comparable prediction sets at matched eps (the paper's App. G
+/// finding, on the synthetic workload).
+#[test]
+fn full_cp_no_less_efficient_than_icp() {
+    let all = make_classification(
+        &ClassificationSpec {
+            n_samples: 260,
+            ..Default::default()
+        },
+        15,
+    );
+    let mut rng = Rng::seed_from(16);
+    let (train, test) = all.split(200, &mut rng);
+    let cfg = MeasureConfig {
+        k: 5,
+        ..Default::default()
+    };
+    let mut m = build_measure(MeasureKind::SimplifiedKnn, &cfg, None);
+    m.fit(&train);
+    let pm_cp: Vec<Vec<f64>> = (0..test.n())
+        .map(|i| {
+            (0..2)
+                .map(|y| p_value(&m.scores(test.row(i), y)))
+                .collect()
+        })
+        .collect();
+    let icp = Icp::calibrate(IcpKnn::new(5, true), &train, 100);
+    let pm_icp: Vec<Vec<f64>> =
+        (0..test.n()).map(|i| icp.p_values(test.row(i))).collect();
+    let s_cp = avg_set_size(&pm_cp, 0.15);
+    let s_icp = avg_set_size(&pm_icp, 0.15);
+    assert!(
+        s_cp <= s_icp + 0.15,
+        "full CP sets ({s_cp}) should not be larger than ICP's ({s_icp})"
+    );
+}
+
+/// Regression coverage: the 1-eps region contains the true target at
+/// the guaranteed rate.
+#[test]
+fn regression_coverage_guarantee() {
+    use exact_cp::data::{make_regression, RegressionSpec};
+    let all = make_regression(
+        &RegressionSpec {
+            n_samples: 260,
+            n_features: 8,
+            n_informative: 4,
+            noise: 10.0,
+        },
+        17,
+    );
+    let mut rng = Rng::seed_from(18);
+    let (train, test) = all.split(200, &mut rng);
+    let mut m = KnnRegressorOptimized::new(5);
+    m.fit(&train);
+    for eps in [0.1, 0.3] {
+        let covered = (0..test.n())
+            .filter(|&i| m.predict_region(test.row(i), eps).contains(test.y[i]))
+            .count();
+        let rate = covered as f64 / test.n() as f64;
+        assert!(rate >= 1.0 - eps - 0.14, "eps={eps}: coverage {rate}");
+    }
+}
