@@ -1,0 +1,138 @@
+//! Bench: the batched scoring engine vs the per-pair loop — the
+//! serving-path speedup this crate's `scores_batch` exists for.
+//!
+//! A 64-object, 4-label batch (the acceptance shape) is scored two
+//! ways for each measure family:
+//!
+//! * **per-pair** — `scores(x, y)` for every (object, label) pair, the
+//!   pre-batching serving path: one distance/kernel row per pair;
+//! * **batched** — one `scores_batch(xs, labels)` call: one row per
+//!   object, reused across labels (and, for the standard k-NN/KDE
+//!   variants, one row per *training* point per batch).
+//!
+//! Outputs are asserted bit-identical before timing, then each path is
+//! timed and the speedup printed. LS-SVM is binary-only, so it runs on
+//! a 2-label dataset at the same batch width.
+
+use std::time::Duration;
+
+use exact_cp::config::{MeasureConfig, MeasureKind};
+use exact_cp::coordinator::factory::build_measure;
+use exact_cp::cp::measure::CpMeasure;
+use exact_cp::data::{make_classification, ClassificationSpec, Label};
+
+fn assert_batch_matches(
+    m: &dyn CpMeasure,
+    xs: &[&[f64]],
+    labels: &[Label],
+) {
+    let batch = m.scores_batch(xs, labels);
+    assert_eq!(batch.len(), xs.len() * labels.len());
+    for (xi, x) in xs.iter().enumerate() {
+        for (li, &y) in labels.iter().enumerate() {
+            let single = m.scores(x, y);
+            let got = &batch[xi * labels.len() + li];
+            assert_eq!(got.test.to_bits(), single.test.to_bits());
+            for (a, b) in got.train.iter().zip(&single.train) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+}
+
+fn bench_measure(
+    name: &str,
+    m: &dyn CpMeasure,
+    xs: &[&[f64]],
+    labels: &[Label],
+    budget: Duration,
+) {
+    assert_batch_matches(m, xs, labels);
+    let t_pair = exact_cp::bench_harness::timing::microbench(
+        &format!("{name}: per-pair loop"),
+        budget,
+        || {
+            let mut acc = 0.0;
+            for x in xs {
+                for &y in labels {
+                    acc += m.scores(x, y).test;
+                }
+            }
+            acc
+        },
+    );
+    let t_batch = exact_cp::bench_harness::timing::microbench(
+        &format!("{name}: scores_batch"),
+        budget,
+        || {
+            m.scores_batch(xs, labels)
+                .iter()
+                .map(|s| s.test)
+                .sum::<f64>()
+        },
+    );
+    println!("{name}: batched speedup {:.2}x", t_pair / t_batch);
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let budget = Duration::from_millis(if quick { 150 } else { 1000 });
+    let n = if quick { 256 } else { 512 };
+    let m_test = 64usize;
+    let cfg = MeasureConfig::default();
+
+    // 4-label workload for the label-generic measures
+    let ds4 = make_classification(
+        &ClassificationSpec {
+            n_samples: n,
+            n_classes: 4,
+            n_informative: 3,
+            ..Default::default()
+        },
+        1,
+    );
+    let probe4 = make_classification(
+        &ClassificationSpec {
+            n_samples: m_test,
+            n_classes: 4,
+            n_informative: 3,
+            ..Default::default()
+        },
+        2,
+    );
+    let xs4: Vec<&[f64]> = (0..probe4.n()).map(|i| probe4.row(i)).collect();
+    let labels4: Vec<Label> = (0..4).collect();
+
+    println!(
+        "== batch_predict: {} objects x {} labels at n={n} ==",
+        m_test,
+        labels4.len()
+    );
+    for kind in [MeasureKind::SimplifiedKnn, MeasureKind::Knn, MeasureKind::Kde]
+    {
+        let mut m = build_measure(kind, &cfg, None);
+        m.fit(&ds4);
+        bench_measure(&m.name(), m.as_ref(), &xs4, &labels4, budget);
+    }
+
+    // LS-SVM is binary: same batch width, 2 labels
+    let ds2 = make_classification(
+        &ClassificationSpec {
+            n_samples: n,
+            ..Default::default()
+        },
+        3,
+    );
+    let probe2 = make_classification(
+        &ClassificationSpec {
+            n_samples: m_test,
+            ..Default::default()
+        },
+        4,
+    );
+    let xs2: Vec<&[f64]> = (0..probe2.n()).map(|i| probe2.row(i)).collect();
+    let labels2: Vec<Label> = vec![0, 1];
+    let mut m = build_measure(MeasureKind::LsSvm, &cfg, None);
+    m.fit(&ds2);
+    bench_measure(&m.name(), m.as_ref(), &xs2, &labels2, budget);
+}

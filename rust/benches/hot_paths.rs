@@ -106,4 +106,17 @@ fn main() {
     microbench("scores(): lssvm opt n=2048", budget, || {
         svm.scores(&x, 0).test
     });
+
+    // batched scoring: 8 objects x 2 labels in one scores_batch call —
+    // the distance/kernel row per object is shared across labels
+    let probe: Vec<Vec<f64>> = (0..8)
+        .map(|_| (0..ds.p).map(|_| rng.normal()).collect())
+        .collect();
+    let xs: Vec<&[f64]> = probe.iter().map(|v| v.as_slice()).collect();
+    microbench("scores_batch(): sknn 8x2 pairs", budget, || {
+        knn.scores_batch(&xs, &[0, 1]).len()
+    });
+    microbench("scores_batch(): lssvm 8x2 pairs", budget, || {
+        svm.scores_batch(&xs, &[0, 1]).len()
+    });
 }

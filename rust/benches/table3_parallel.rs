@@ -47,4 +47,29 @@ fn main() {
             parallel_map(n_test, threads, work).into_iter().sum::<f64>()
         });
     }
+    // The batched engine: the whole test set through ONE scores_batch
+    // call (row per object shared across labels), then chunked across a
+    // thread pool — the serving coordinator's configuration.
+    let xs: Vec<&[f64]> = (0..n_test).map(|i| test.row(i)).collect();
+    microbench("batched (one scores_batch)", budget, || {
+        m.scores_batch(&xs, &[0, 1])
+            .iter()
+            .map(p_value)
+            .sum::<f64>()
+    });
+    for threads in [2usize, 4] {
+        microbench(&format!("batched parallel x{threads}"), budget, || {
+            let chunk = (n_test + threads - 1) / threads;
+            parallel_map(threads, threads, |t| {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n_test);
+                m.scores_batch(&xs[lo..hi], &[0, 1])
+                    .iter()
+                    .map(p_value)
+                    .sum::<f64>()
+            })
+            .into_iter()
+            .sum::<f64>()
+        });
+    }
 }

@@ -160,4 +160,90 @@ mod tests {
         let got = h.join().unwrap().unwrap();
         assert_eq!(got, vec![1, 2], "straggler should join the batch");
     }
+
+    #[test]
+    fn max_wait_cutoff_ships_partial_batch() {
+        // an under-full batch must ship once max_wait expires, NOT wait
+        // for items that arrive after the deadline
+        let b = Arc::new(Batcher::new(8, Duration::from_millis(40), 100));
+        b.push(1).unwrap();
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            (b2.next_batch(), t0.elapsed())
+        });
+        // a very late straggler, far past the deadline
+        std::thread::sleep(Duration::from_millis(300));
+        b.push(2).unwrap();
+        let (got, waited) = h.join().unwrap();
+        assert_eq!(got.unwrap(), vec![1], "late item must miss the batch");
+        assert!(
+            waited < Duration::from_millis(250),
+            "cutoff ignored: waited {waited:?}"
+        );
+        // the late item is still queued for the next batch
+        assert_eq!(b.next_batch().unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn full_backpressure_recovers_after_drain() {
+        let b = Batcher::new(4, Duration::from_millis(1), 2);
+        b.push(1).unwrap();
+        b.push(2).unwrap();
+        assert_eq!(b.push(3), Err(PushError::Full));
+        assert_eq!(b.depth(), 2, "rejected push must not corrupt queue");
+        assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
+        // capacity freed: pushes succeed again
+        b.push(3).unwrap();
+        assert_eq!(b.depth(), 1);
+        assert_eq!(b.next_batch().unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn close_drains_in_max_batch_chunks_then_none() {
+        let b = Batcher::new(2, Duration::from_millis(1), 10);
+        for i in 0..5 {
+            b.push(i).unwrap();
+        }
+        b.close();
+        assert_eq!(b.push(9), Err(PushError::Closed));
+        // drain respects max_batch even after close
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1]);
+        assert_eq!(b.next_batch().unwrap(), vec![2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4]);
+        assert!(b.next_batch().is_none());
+        assert!(b.next_batch().is_none(), "closed state is terminal");
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let b = Arc::new(Batcher::new(4, Duration::from_millis(1), 10));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none(), "consumer must wake on close");
+    }
+
+    #[test]
+    fn close_during_straggler_wait_ships_immediately() {
+        // consumer holds one item inside the straggler window; close()
+        // must cut the wait short and ship what it has
+        let b = Arc::new(Batcher::new(8, Duration::from_secs(5), 10));
+        b.push(7).unwrap();
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            (b2.next_batch(), t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        b.close();
+        let (got, waited) = h.join().unwrap();
+        assert_eq!(got.unwrap(), vec![7]);
+        assert!(
+            waited < Duration::from_secs(4),
+            "close ignored mid-wait: {waited:?}"
+        );
+    }
 }

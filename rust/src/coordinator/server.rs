@@ -24,6 +24,7 @@ use crate::config::ServeConfig;
 use crate::coordinator::batcher::{Batcher, PushError};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::state::Registry;
+use crate::cp::classifier::{forced_from_p_values, set_from_p_values};
 use crate::util::json::Json;
 
 /// One queued prediction job.
@@ -63,14 +64,7 @@ impl Server {
                 std::thread::spawn(move || {
                     while let Some(batch) = b.next_batch() {
                         met.record_batch(batch.len());
-                        for job in batch {
-                            let out = Self::run_job(&reg, &job);
-                            met.observe_latency_us(
-                                job.enqueued.elapsed().as_micros() as u64,
-                            );
-                            met.predictions.fetch_add(1, Ordering::Relaxed);
-                            let _ = job.resp.send(out);
-                        }
+                        Self::run_batch(&reg, &met, batch);
                     }
                 })
             })
@@ -85,29 +79,62 @@ impl Server {
         }
     }
 
-    fn run_job(reg: &Registry, job: &Job) -> Json {
-        match reg.with(&job.deployment, |d| {
-            let ps = d.p_values(&job.x);
-            let set: Vec<Json> = ps
-                .iter()
-                .enumerate()
-                .filter(|(_, &p)| p > job.eps)
-                .map(|(y, _)| Json::Num(y as f64))
-                .collect();
-            let forced = ps
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(y, _)| y)
-                .unwrap_or(0);
-            Json::obj(vec![
-                ("p_values", Json::from_f64_slice(&ps)),
-                ("set", Json::Arr(set)),
-                ("forced", Json::Num(forced as f64)),
-            ])
-        }) {
-            Ok(j) => j,
-            Err(e) => err_json(&e.to_string()),
+    /// Score one drained batch. Jobs are grouped by deployment
+    /// (preserving arrival order within each group) and scored with one
+    /// `Deployment::p_values_batch` call per `LOCK_CHUNK`-job sub-chunk,
+    /// so each test object's distance/kernel row is computed once
+    /// rather than once per candidate label — the batch axis the
+    /// dynamic batcher exists to exploit. Workers each drain their own
+    /// batch, so the existing pool still fans chunks out across cores.
+    fn run_batch(reg: &Registry, met: &Metrics, batch: Vec<Job>) {
+        let mut groups: Vec<(String, Vec<Job>)> = Vec::new();
+        for job in batch {
+            match groups.iter_mut().find(|(d, _)| *d == job.deployment) {
+                Some((_, jobs)) => jobs.push(job),
+                None => {
+                    let dep = job.deployment.clone();
+                    groups.push((dep, vec![job]));
+                }
+            }
+        }
+        // Lock-hold bound: the read lock is reacquired per sub-chunk so
+        // a pending learn/unlearn (write lock) waits for at most one
+        // chunk, not a whole group — the old per-job path released the
+        // lock between jobs; this is the same fairness at 1/CHUNK the
+        // acquisitions. Within a chunk each object's row reuse across
+        // labels (the main batch win) is fully preserved.
+        const LOCK_CHUNK: usize = 16;
+        for (dep, jobs) in groups {
+            for chunk in jobs.chunks(LOCK_CHUNK) {
+                let xs: Vec<&[f64]> =
+                    chunk.iter().map(|j| j.x.as_slice()).collect();
+                match reg.with(&dep, |d| d.p_values_batch(&xs)) {
+                    Ok(ps_rows) => {
+                        debug_assert_eq!(ps_rows.len(), chunk.len());
+                        for (job, ps) in chunk.iter().zip(ps_rows) {
+                            let out = predict_json(&ps, job.eps);
+                            met.observe_latency_us(
+                                job.enqueued.elapsed().as_micros() as u64,
+                            );
+                            met.predictions.fetch_add(1, Ordering::Relaxed);
+                            let _ = job.resp.send(out);
+                        }
+                    }
+                    Err(e) => {
+                        // metrics parity with the success arm (and the
+                        // old per-job loop): failed jobs still count as
+                        // served predictions and contribute latency
+                        let msg = e.to_string();
+                        for job in chunk {
+                            met.observe_latency_us(
+                                job.enqueued.elapsed().as_micros() as u64,
+                            );
+                            met.predictions.fetch_add(1, Ordering::Relaxed);
+                            let _ = job.resp.send(err_json(&msg));
+                        }
+                    }
+                }
+            }
         }
     }
 
@@ -235,6 +262,22 @@ impl Server {
             let _ = w.join();
         }
     }
+}
+
+/// Build the predict-response object from a per-label p-value row,
+/// via the classifier's canonical set/forced helpers so the wire
+/// answers match `FullCp` exactly (including argmax tie-breaking).
+fn predict_json(ps: &[f64], eps: f64) -> Json {
+    let set: Vec<Json> = set_from_p_values(ps, eps)
+        .into_iter()
+        .map(|y| Json::Num(y as f64))
+        .collect();
+    let forced = forced_from_p_values(ps).label;
+    Json::obj(vec![
+        ("p_values", Json::from_f64_slice(ps)),
+        ("set", Json::Arr(set)),
+        ("forced", Json::Num(forced as f64)),
+    ])
 }
 
 fn err_json(msg: &str) -> Json {

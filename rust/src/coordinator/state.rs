@@ -48,13 +48,23 @@ impl Deployment {
             .collect()
     }
 
+    /// Per-label p-values for a whole batch of test objects through ONE
+    /// [`CpMeasure::scores_batch`] call — the serving hot path: the
+    /// worker pool drains a dynamic batch and scores it here so each
+    /// object's distance/kernel row is computed once, not once per
+    /// label. Row i corresponds to `xs[i]`; output equals per-object
+    /// [`Deployment::p_values`] bit for bit (the measure's batch
+    /// contract).
+    pub fn p_values_batch(&self, xs: &[&[f64]]) -> Vec<Vec<f64>> {
+        crate::cp::pvalue::p_value_rows(
+            self.measure.as_ref(),
+            xs,
+            self.n_labels,
+        )
+    }
+
     pub fn predict_set(&self, x: &[f64], eps: f64) -> Vec<Label> {
-        self.p_values(x)
-            .iter()
-            .enumerate()
-            .filter(|(_, &p)| p > eps)
-            .map(|(y, _)| y)
-            .collect()
+        crate::cp::classifier::set_from_p_values(&self.p_values(x), eps)
     }
 
     /// Online increment; Err if the measure cannot update in place.
@@ -175,6 +185,25 @@ mod tests {
         assert_eq!(dep.version, 1);
         dep.unlearn(40).unwrap();
         assert_eq!(dep.n_train(), 40);
+    }
+
+    #[test]
+    fn p_values_batch_matches_single() {
+        let d = ds(30, 3);
+        let dep = Deployment::train(
+            "kde",
+            MeasureKind::Kde,
+            &MeasureConfig::default(),
+            &d,
+            None,
+        );
+        let xs: Vec<&[f64]> = (0..4).map(|i| d.row(i)).collect();
+        let rows = dep.p_values_batch(&xs);
+        assert_eq!(rows.len(), 4);
+        for (x, row) in xs.iter().zip(&rows) {
+            assert_eq!(row, &dep.p_values(x));
+        }
+        assert!(dep.p_values_batch(&[]).is_empty());
     }
 
     #[test]

@@ -46,6 +46,18 @@ impl<M: CpMeasure> FullCp<M> {
             .collect()
     }
 
+    /// [`p_values`] for a whole batch of test objects through ONE
+    /// [`CpMeasure::scores_batch`] call: one row of per-label p-values
+    /// per test object. Equal to calling [`p_values`] per object (the
+    /// measure's batch contract is bit-for-bit), but measures with a
+    /// specialized batch path compute each object's distance/kernel row
+    /// once instead of once per label.
+    ///
+    /// [`p_values`]: FullCp::p_values
+    pub fn p_values_batch(&self, xs: &[&[f64]]) -> Vec<Vec<f64>> {
+        crate::cp::pvalue::p_value_rows(&self.measure, xs, self.n_labels)
+    }
+
     /// p-value for a single (x, y) pairing.
     pub fn p_value_for(&self, x: &[f64], y: Label) -> f64 {
         p_value(&self.measure.scores(x, y))
@@ -53,31 +65,30 @@ impl<M: CpMeasure> FullCp<M> {
 
     /// The prediction set Gamma^eps.
     pub fn predict_set(&self, x: &[f64], eps: f64) -> Vec<Label> {
-        self.p_values(x)
+        set_from_p_values(&self.p_values(x), eps)
+    }
+
+    /// Prediction sets for a whole batch of test objects, via one
+    /// [`CpMeasure::scores_batch`] call (see [`FullCp::p_values_batch`]).
+    pub fn predict_sets(&self, xs: &[&[f64]], eps: f64) -> Vec<Vec<Label>> {
+        self.p_values_batch(xs)
             .iter()
-            .enumerate()
-            .filter(|(_, &p)| p > eps)
-            .map(|(y, _)| y)
+            .map(|ps| set_from_p_values(ps, eps))
             .collect()
     }
 
     /// Forced point prediction + credibility/confidence.
     pub fn forced(&self, x: &[f64]) -> ForcedPrediction {
-        let ps = self.p_values(x);
-        let (mut best, mut second) = ((0usize, f64::MIN), f64::MIN);
-        for (y, &p) in ps.iter().enumerate() {
-            if p > best.1 {
-                second = best.1;
-                best = (y, p);
-            } else if p > second {
-                second = p;
-            }
-        }
-        ForcedPrediction {
-            label: best.0,
-            credibility: best.1,
-            confidence: 1.0 - second.max(0.0),
-        }
+        forced_from_p_values(&self.p_values(x))
+    }
+
+    /// [`FullCp::forced`] for a whole batch, via one batched scoring
+    /// pass.
+    pub fn forced_batch(&self, xs: &[&[f64]]) -> Vec<ForcedPrediction> {
+        self.p_values_batch(xs)
+            .iter()
+            .map(|ps| forced_from_p_values(ps))
+            .collect()
     }
 
     /// Access the wrapped measure (online updates, diagnostics).
@@ -91,6 +102,36 @@ impl<M: CpMeasure> FullCp<M> {
 
     pub fn n_labels(&self) -> usize {
         self.n_labels
+    }
+}
+
+/// Gamma^eps from a per-label p-value row — the canonical set filter,
+/// shared by [`FullCp`] and the serving coordinator.
+pub fn set_from_p_values(ps: &[f64], eps: f64) -> Vec<Label> {
+    ps.iter()
+        .enumerate()
+        .filter(|(_, &p)| p > eps)
+        .map(|(y, _)| y)
+        .collect()
+}
+
+/// Forced prediction from a per-label p-value row — the canonical
+/// argmax (ties break to the FIRST maximal label), shared by
+/// [`FullCp`] and the serving coordinator.
+pub fn forced_from_p_values(ps: &[f64]) -> ForcedPrediction {
+    let (mut best, mut second) = ((0usize, f64::MIN), f64::MIN);
+    for (y, &p) in ps.iter().enumerate() {
+        if p > best.1 {
+            second = best.1;
+            best = (y, p);
+        } else if p > second {
+            second = p;
+        }
+    }
+    ForcedPrediction {
+        label: best.0,
+        credibility: best.1,
+        confidence: 1.0 - second.max(0.0),
     }
 }
 
@@ -149,5 +190,26 @@ mod tests {
         assert_eq!(f.label, 0);
         assert_eq!(f.credibility, 1.0);
         assert!((f.confidence - (1.0 - 0.2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_apis_match_single_calls() {
+        let cp = FullCp::train(Rigged { n: 0 }, &toy());
+        let (a, b) = ([0.0, 0.0], [1.0, 1.0]);
+        let xs: Vec<&[f64]> = vec![&a, &b];
+        let rows = cp.p_values_batch(&xs);
+        assert_eq!(rows.len(), 2);
+        for (x, row) in xs.iter().zip(&rows) {
+            assert_eq!(row, &cp.p_values(x));
+        }
+        assert_eq!(
+            cp.predict_sets(&xs, 0.3),
+            vec![cp.predict_set(&a, 0.3), cp.predict_set(&b, 0.3)]
+        );
+        assert_eq!(
+            cp.forced_batch(&xs),
+            vec![cp.forced(&a), cp.forced(&b)]
+        );
+        assert!(cp.p_values_batch(&[]).is_empty());
     }
 }

@@ -41,6 +41,36 @@ pub trait CpMeasure: Send + Sync {
     /// Nonconformity scores for candidate-labelled test example (x, y).
     fn scores(&self, x: &[f64], y: Label) -> Scores;
 
+    /// Batched scoring over the cross product `xs × labels`.
+    ///
+    /// Returns one [`Scores`] per (test object, candidate label) pair,
+    /// laid out x-major: the result has `xs.len() * labels.len()`
+    /// entries and entry `i * labels.len() + j` scores `(xs[i],
+    /// labels[j])`. An empty `xs` or `labels` yields an empty vector.
+    ///
+    /// **Contract: identical output to per-pair [`scores`]** — for
+    /// every pair, `scores_batch(..)[i * labels.len() + j]` must equal
+    /// `scores(xs[i], labels[j])` bit for bit. The default
+    /// implementation trivially satisfies this by looping over pairs;
+    /// specialized implementations (k-NN, KDE, LS-SVM) compute each
+    /// test row's distance/kernel row **once** and reuse it across all
+    /// candidate labels and across the LOO provisional-score updates,
+    /// turning `l` row computations per test object into one — the
+    /// batch-serving hot path. The contract is enforced bit-for-bit by
+    /// `rust/tests/proptests.rs` and pinned by the golden fixtures in
+    /// `rust/tests/golden_pvalues.rs`.
+    ///
+    /// [`scores`]: CpMeasure::scores
+    fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
+        let mut out = Vec::with_capacity(xs.len() * labels.len());
+        for x in xs {
+            for &y in labels {
+                out.push(self.scores(x, y));
+            }
+        }
+        out
+    }
+
     /// Number of training examples currently fitted.
     fn n(&self) -> usize;
 
@@ -57,6 +87,43 @@ pub trait CpMeasure: Send + Sync {
     /// Decrementally unlearn the example at training index `idx`.
     fn unlearn(&mut self, _idx: usize) -> bool {
         false
+    }
+}
+
+/// Boxed measures forward every method — including `scores_batch`, so
+/// a `Box<dyn CpMeasure>` keeps its concrete type's specialized batch
+/// path. Lets [`crate::cp::FullCp`] wrap factory-built measures.
+impl<M: CpMeasure + ?Sized> CpMeasure for Box<M> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn fit(&mut self, ds: &Dataset) {
+        (**self).fit(ds)
+    }
+
+    fn scores(&self, x: &[f64], y: Label) -> Scores {
+        (**self).scores(x, y)
+    }
+
+    fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
+        (**self).scores_batch(xs, labels)
+    }
+
+    fn n(&self) -> usize {
+        (**self).n()
+    }
+
+    fn n_labels(&self) -> usize {
+        (**self).n_labels()
+    }
+
+    fn learn(&mut self, x: &[f64], y: Label) -> bool {
+        (**self).learn(x, y)
+    }
+
+    fn unlearn(&mut self, idx: usize) -> bool {
+        (**self).unlearn(idx)
     }
 }
 
@@ -93,5 +160,31 @@ mod tests {
         let mut d = Dummy { n: 0 };
         assert!(!d.learn(&[0.0], 0));
         assert!(!d.unlearn(0));
+    }
+
+    #[test]
+    fn default_scores_batch_is_per_pair_cross_product() {
+        let d = Dummy { n: 3 };
+        let (a, b) = ([0.0, 1.0], [2.0, 3.0]);
+        let xs: Vec<&[f64]> = vec![&a, &b];
+        let batch = d.scores_batch(&xs, &[0, 1]);
+        assert_eq!(batch.len(), 4);
+        for (i, &x) in xs.iter().enumerate() {
+            for (j, &y) in [0usize, 1].iter().enumerate() {
+                let single = d.scores(x, y);
+                let got = &batch[i * 2 + j];
+                assert_eq!(got.train, single.train);
+                assert_eq!(got.test.to_bits(), single.test.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn default_scores_batch_empty_inputs() {
+        let d = Dummy { n: 2 };
+        let x = [0.0];
+        let xs: Vec<&[f64]> = vec![&x];
+        assert!(d.scores_batch(&[], &[0, 1]).is_empty());
+        assert!(d.scores_batch(&xs, &[]).is_empty());
     }
 }

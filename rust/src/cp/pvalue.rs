@@ -1,6 +1,7 @@
 //! Conformal p-values.
 
-use crate::cp::measure::Scores;
+use crate::cp::measure::{CpMeasure, Scores};
+use crate::data::Label;
 
 /// Plain conformal p-value (Algorithm 1, line 5):
 /// p = (#{i : alpha_i >= alpha} + 1) / (n + 1).
@@ -11,6 +12,27 @@ use crate::cp::measure::Scores;
 pub fn p_value(s: &Scores) -> f64 {
     let ge = s.train.iter().filter(|&&a| a >= s.test).count();
     (ge + 1) as f64 / (s.train.len() + 1) as f64
+}
+
+/// One row of per-label p-values per test object, from ONE
+/// [`CpMeasure::scores_batch`] pass over `xs × (0..n_labels)` — the
+/// shared core of `FullCp::p_values_batch` and the coordinator's
+/// `Deployment::p_values_batch`. Row i corresponds to `xs[i]`; equal
+/// to per-pair scoring bit for bit (the measure's batch contract).
+pub fn p_value_rows<M: CpMeasure + ?Sized>(
+    measure: &M,
+    xs: &[&[f64]],
+    n_labels: usize,
+) -> Vec<Vec<f64>> {
+    if n_labels == 0 {
+        return xs.iter().map(|_| Vec::new()).collect();
+    }
+    let labels: Vec<Label> = (0..n_labels).collect();
+    measure
+        .scores_batch(xs, &labels)
+        .chunks(n_labels)
+        .map(|row| row.iter().map(p_value).collect())
+        .collect()
 }
 
 /// Smoothed conformal p-value:

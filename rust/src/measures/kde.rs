@@ -131,6 +131,71 @@ impl CpMeasure for KdeStandard {
         }
     }
 
+    /// Batched standard KDE. The per-pair path recomputes every
+    /// training point's kernel row per (x, y) pair; this override
+    /// computes the n training rows (and their label-restricted
+    /// preliminary sums) once per batch and the m test rows once per
+    /// object. The preliminary sums accumulate in the same j-order as
+    /// the per-pair loop, so all scores are bit-identical to per-pair
+    /// [`CpMeasure::scores`].
+    fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
+        let ds = self.ds.as_ref().expect("fit first");
+        let n = ds.n();
+        let h2 = self.h * self.h;
+        let scale = h_scale(self.h, ds.p);
+        let counts = ds.label_counts();
+        if xs.is_empty() || labels.is_empty() {
+            return Vec::new();
+        }
+        // kernel row per test object, shared across labels
+        let mut k_tests = Vec::with_capacity(xs.len());
+        for x in xs {
+            let mut k_test = vec![0.0; n];
+            self.engine.kde_row(x, &ds.x, ds.p, h2, &mut k_test);
+            k_tests.push(k_test);
+        }
+        // per-training-point preliminary sums, one k_i row per batch
+        let mut prelim = vec![0.0; n];
+        let mut k_i = vec![0.0; n];
+        for i in 0..n {
+            self.engine.kde_row(ds.row(i), &ds.x, ds.p, h2, &mut k_i);
+            let mut s = 0.0;
+            for j in 0..n {
+                if j != i && ds.y[j] == ds.y[i] {
+                    s += k_i[j];
+                }
+            }
+            prelim[i] = s;
+        }
+        let mut out = Vec::with_capacity(xs.len() * labels.len());
+        for k_test in &k_tests {
+            for &y in labels {
+                let mut train = Vec::with_capacity(n);
+                for i in 0..n {
+                    let mut ksum = prelim[i];
+                    let mut n_y = counts[ds.y[i]] - 1;
+                    if y == ds.y[i] {
+                        ksum += k_test[i];
+                        n_y += 1;
+                    }
+                    train.push(kde_alpha(ksum, n_y, scale));
+                }
+                let mut ksum = 0.0;
+                for j in 0..n {
+                    if ds.y[j] == y {
+                        ksum += k_test[j];
+                    }
+                }
+                let n_y = if y < counts.len() { counts[y] } else { 0 };
+                out.push(Scores {
+                    train,
+                    test: kde_alpha(ksum, n_y, scale),
+                });
+            }
+        }
+        out
+    }
+
     fn n(&self) -> usize {
         self.ds.as_ref().map_or(0, |d| d.n())
     }
@@ -168,6 +233,36 @@ impl KdeOptimized {
             engine,
         }
     }
+
+    /// §4.1's O(n) preliminary-score update given a precomputed kernel
+    /// row from the test object to every training point. Shared by
+    /// `scores` (one row per call) and `scores_batch` (one row reused
+    /// across all candidate labels).
+    fn scores_from_krow(&self, k_test: &[f64], y: Label) -> Scores {
+        let ds = self.ds.as_ref().expect("fit first");
+        let n = ds.n();
+        let scale = h_scale(self.h, ds.p);
+        let mut train = Vec::with_capacity(n);
+        let mut test_sum = 0.0;
+        for i in 0..n {
+            let (ksum, n_y) = if ds.y[i] == y {
+                test_sum += k_test[i];
+                (self.prelim[i] + k_test[i], self.counts[ds.y[i]])
+            } else {
+                (self.prelim[i], self.counts[ds.y[i]] - 1)
+            };
+            train.push(kde_alpha(ksum, n_y, scale));
+        }
+        let n_y = if y < self.counts.len() {
+            self.counts[y]
+        } else {
+            0
+        };
+        Scores {
+            train,
+            test: kde_alpha(test_sum, n_y, scale),
+        }
+    }
 }
 
 impl CpMeasure for KdeOptimized {
@@ -197,33 +292,29 @@ impl CpMeasure for KdeOptimized {
 
     fn scores(&self, x: &[f64], y: Label) -> Scores {
         let ds = self.ds.as_ref().expect("fit first");
-        let n = ds.n();
         let h2 = self.h * self.h;
-        let scale = h_scale(self.h, ds.p);
-
-        let mut k_test = vec![0.0; n];
+        let mut k_test = vec![0.0; ds.n()];
         self.engine.kde_row(x, &ds.x, ds.p, h2, &mut k_test);
+        self.scores_from_krow(&k_test, y)
+    }
 
-        let mut train = Vec::with_capacity(n);
-        let mut test_sum = 0.0;
-        for i in 0..n {
-            let (ksum, n_y) = if ds.y[i] == y {
-                test_sum += k_test[i];
-                (self.prelim[i] + k_test[i], self.counts[ds.y[i]])
-            } else {
-                (self.prelim[i], self.counts[ds.y[i]] - 1)
-            };
-            train.push(kde_alpha(ksum, n_y, scale));
+    /// Batched optimized KDE: each test object's Gaussian kernel row is
+    /// computed ONCE and reused across every candidate label's §4.1
+    /// preliminary-score update. Bit-identical to per-pair
+    /// [`CpMeasure::scores`]: both paths share
+    /// [`Self::scores_from_krow`].
+    fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
+        let ds = self.ds.as_ref().expect("fit first");
+        let h2 = self.h * self.h;
+        let mut out = Vec::with_capacity(xs.len() * labels.len());
+        let mut k_test = vec![0.0; ds.n()];
+        for x in xs {
+            self.engine.kde_row(x, &ds.x, ds.p, h2, &mut k_test);
+            for &y in labels {
+                out.push(self.scores_from_krow(&k_test, y));
+            }
         }
-        let n_y = if y < self.counts.len() {
-            self.counts[y]
-        } else {
-            0
-        };
-        Scores {
-            train,
-            test: kde_alpha(test_sum, n_y, scale),
-        }
+        out
     }
 
     fn n(&self) -> usize {
@@ -443,6 +534,33 @@ mod tests {
         let s = m.scores(ds.row(0), 0);
         assert!(s.train.iter().all(|v| v.is_finite()));
         assert!(s.test.is_finite());
+    }
+
+    #[test]
+    fn scores_batch_bit_identical_to_single() {
+        let ds = small_ds(28, 9);
+        let probe = small_ds(5, 10);
+        let xs: Vec<&[f64]> = (0..probe.n()).map(|i| probe.row(i)).collect();
+        let mut s = KdeStandard::new(0.8);
+        let mut o = KdeOptimized::new(0.8);
+        s.fit(&ds);
+        o.fit(&ds);
+        for m in [&s as &dyn CpMeasure, &o as &dyn CpMeasure] {
+            let batch = m.scores_batch(&xs, &[0, 1]);
+            assert_eq!(batch.len(), xs.len() * 2);
+            for (xi, x) in xs.iter().enumerate() {
+                for y in 0..2usize {
+                    let single = m.scores(x, y);
+                    let got = &batch[xi * 2 + y];
+                    assert_eq!(got.test.to_bits(), single.test.to_bits());
+                    for (a, b) in got.train.iter().zip(&single.train) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+            }
+            assert!(m.scores_batch(&[], &[0, 1]).is_empty());
+            assert!(m.scores_batch(&xs, &[]).is_empty());
+        }
     }
 
     #[test]

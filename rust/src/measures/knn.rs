@@ -181,6 +181,64 @@ impl CpMeasure for KnnStandard {
         Scores { train, test }
     }
 
+    /// Batched standard scoring. The per-pair path recomputes every
+    /// training point's distance row for every (x, y) pair — m·l·(n+1)
+    /// O(n p) rows for an m-object, l-label batch; this override
+    /// computes the n training rows once per batch and the m test rows
+    /// once per object (n + m rows total), reusing them across all
+    /// pairs. Scores are bit-identical to per-pair [`CpMeasure::scores`]
+    /// because every `measure_on_bag` call receives the same inputs.
+    fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
+        let ds = self.ds();
+        let n = ds.n();
+        let p = ds.p;
+        if xs.is_empty() || labels.is_empty() {
+            return Vec::new();
+        }
+        // one distance row per test object, shared across labels
+        let mut d_tests = Vec::with_capacity(xs.len());
+        for x in xs {
+            let mut d_test = vec![0.0; n];
+            self.engine.dist_row_sq(x, &ds.x, p, &mut d_test);
+            for v in d_test.iter_mut() {
+                *v = v.sqrt();
+            }
+            d_tests.push(d_test);
+        }
+        // test scores up front; train slots filled by the i-sweep below
+        let mut out = Vec::with_capacity(xs.len() * labels.len());
+        for d_test in &d_tests {
+            for &y in labels {
+                out.push(Scores {
+                    train: vec![0.0; n],
+                    test: self.measure_on_bag(d_test, &ds.y, None, y, None),
+                });
+            }
+        }
+        // each training point's distance row, computed once and reused
+        // across every (test object, label) pair
+        let mut d_i = vec![0.0; n];
+        for i in 0..n {
+            self.engine.dist_row_sq(ds.row(i), &ds.x, p, &mut d_i);
+            for v in d_i.iter_mut() {
+                *v = v.sqrt();
+            }
+            for (xi, d_test) in d_tests.iter().enumerate() {
+                for (li, &y) in labels.iter().enumerate() {
+                    out[xi * labels.len() + li].train[i] = self
+                        .measure_on_bag(
+                            &d_i,
+                            &ds.y,
+                            Some(i),
+                            ds.y[i],
+                            Some((d_test[i], y)),
+                        );
+                }
+            }
+        }
+        out
+    }
+
     fn n(&self) -> usize {
         self.ds.as_ref().map_or(0, |d| d.n())
     }
@@ -239,6 +297,59 @@ impl KnnOptimized {
         self.same[i] = same;
         self.diff[i] = diff;
     }
+
+    /// §3.1's provisional-score sweep given a precomputed (already
+    /// square-rooted) distance row `d` from the test object to every
+    /// training point. Shared by `scores` (one row per call) and
+    /// `scores_batch` (one row reused across all candidate labels).
+    fn scores_from_row(&self, d: &[f64], y: Label) -> Scores {
+        let ds = self.ds();
+        let n = ds.n();
+
+        // alpha for the test example: k best same-label (and diff-label)
+        // distances from x to Z.
+        let (t_same, t_diff) = kbest_split(d, &ds.y, None, y, self.k);
+
+        let mut train = Vec::with_capacity(n);
+        if self.simplified {
+            for i in 0..n {
+                let kb = &self.same[i];
+                let alpha = if ds.y[i] == y {
+                    // test point may enter i's same-label k-NN set
+                    let len = if kb.full() { kb.len() } else { kb.len() + 1 };
+                    knn_sum(len, kb.sum_with(d[i]))
+                } else {
+                    knn_sum(kb.len(), kb.sum())
+                };
+                train.push(alpha);
+            }
+            Scores {
+                train,
+                test: knn_sum(t_same.len(), t_same.sum()),
+            }
+        } else {
+            for i in 0..n {
+                let (s, f) = (&self.same[i], &self.diff[i]);
+                let (ns_len, ns_sum, nd_len, nd_sum) = if ds.y[i] == y {
+                    let len = if s.full() { s.len() } else { s.len() + 1 };
+                    (len, s.sum_with(d[i]), f.len(), f.sum())
+                } else {
+                    let len = if f.full() { f.len() } else { f.len() + 1 };
+                    (s.len(), s.sum(), len, f.sum_with(d[i]))
+                };
+                train.push(knn_ratio(ns_len, ns_sum, nd_len, nd_sum));
+            }
+            Scores {
+                train,
+                test: knn_ratio(
+                    t_same.len(),
+                    t_same.sum(),
+                    t_diff.len(),
+                    t_diff.sum(),
+                ),
+            }
+        }
+    }
 }
 
 impl CpMeasure for KnnOptimized {
@@ -294,56 +405,33 @@ impl CpMeasure for KnnOptimized {
     /// provisional-score updates (Figure 1's rule).
     fn scores(&self, x: &[f64], y: Label) -> Scores {
         let ds = self.ds();
-        let n = ds.n();
-        let mut d = vec![0.0; n];
+        let mut d = vec![0.0; ds.n()];
         self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d);
         for v in d.iter_mut() {
             *v = v.sqrt();
         }
+        self.scores_from_row(&d, y)
+    }
 
-        // alpha for the test example: k best same-label (and diff-label)
-        // distances from x to Z.
-        let (t_same, t_diff) = kbest_split(&d, &ds.y, None, y, self.k);
-
-        let mut train = Vec::with_capacity(n);
-        if self.simplified {
-            for i in 0..n {
-                let kb = &self.same[i];
-                let alpha = if ds.y[i] == y {
-                    // test point may enter i's same-label k-NN set
-                    let len = if kb.full() { kb.len() } else { kb.len() + 1 };
-                    knn_sum(len, kb.sum_with(d[i]))
-                } else {
-                    knn_sum(kb.len(), kb.sum())
-                };
-                train.push(alpha);
+    /// One `scores_batch` over `xs × labels`: each test object's
+    /// distance row is computed ONCE and reused across every candidate
+    /// label's provisional-score sweep (vs once per (x, y) pair in the
+    /// per-pair path). Bit-identical to per-pair [`CpMeasure::scores`]
+    /// by construction: both paths share [`Self::scores_from_row`].
+    fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
+        let ds = self.ds();
+        let mut out = Vec::with_capacity(xs.len() * labels.len());
+        let mut d = vec![0.0; ds.n()];
+        for x in xs {
+            self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d);
+            for v in d.iter_mut() {
+                *v = v.sqrt();
             }
-            Scores {
-                train,
-                test: knn_sum(t_same.len(), t_same.sum()),
-            }
-        } else {
-            for i in 0..n {
-                let (s, f) = (&self.same[i], &self.diff[i]);
-                let (ns_len, ns_sum, nd_len, nd_sum) = if ds.y[i] == y {
-                    let len = if s.full() { s.len() } else { s.len() + 1 };
-                    (len, s.sum_with(d[i]), f.len(), f.sum())
-                } else {
-                    let len = if f.full() { f.len() } else { f.len() + 1 };
-                    (s.len(), s.sum(), len, f.sum_with(d[i]))
-                };
-                train.push(knn_ratio(ns_len, ns_sum, nd_len, nd_sum));
-            }
-            Scores {
-                train,
-                test: knn_ratio(
-                    t_same.len(),
-                    t_same.sum(),
-                    t_diff.len(),
-                    t_diff.sum(),
-                ),
+            for &y in labels {
+                out.push(self.scores_from_row(&d, y));
             }
         }
+        out
     }
 
     fn n(&self) -> usize {
@@ -617,6 +705,36 @@ mod tests {
                     &dec.scores(q.row(i), y),
                     &refit.scores(q.row(i), y),
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn scores_batch_bit_identical_to_single() {
+        let ds = small_ds(30, 20);
+        let probe = small_ds(6, 21);
+        let xs: Vec<&[f64]> = (0..probe.n()).map(|i| probe.row(i)).collect();
+        for simplified in [true, false] {
+            let mut std_m = KnnStandard::new(3, simplified);
+            let mut opt_m = KnnOptimized::new(3, simplified);
+            std_m.fit(&ds);
+            opt_m.fit(&ds);
+            for m in [&std_m as &dyn CpMeasure, &opt_m as &dyn CpMeasure] {
+                let batch = m.scores_batch(&xs, &[0, 1]);
+                assert_eq!(batch.len(), xs.len() * 2);
+                for (xi, x) in xs.iter().enumerate() {
+                    for y in 0..2usize {
+                        let single = m.scores(x, y);
+                        let got = &batch[xi * 2 + y];
+                        assert_eq!(got.test.to_bits(), single.test.to_bits());
+                        assert_eq!(got.train.len(), single.train.len());
+                        for (a, b) in got.train.iter().zip(&single.train) {
+                            assert_eq!(a.to_bits(), b.to_bits());
+                        }
+                    }
+                }
+                assert!(m.scores_batch(&[], &[0, 1]).is_empty());
+                assert!(m.scores_batch(&xs, &[]).is_empty());
             }
         }
     }

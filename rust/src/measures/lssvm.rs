@@ -367,6 +367,93 @@ impl LsSvmOptimized {
             })
             .collect();
     }
+
+    /// All label-independent state for scoring one test object: the
+    /// feature map application (O(q p)), the rank-1 update vector
+    /// u = (C - I) phi_x with its O(q^2) matvec, and the per-point
+    /// projections b_i = u . phi_i (O(n q)). Computing this once per
+    /// test object is what `scores_batch` amortizes across candidate
+    /// labels — only the O(n q) virtual-decrement sweep of
+    /// [`Self::scores_from_prepared`] remains per label.
+    fn prepare_test(&self, x: &[f64]) -> PreparedTest {
+        let phi = self.phi.as_ref().expect("fit first");
+        let built = self.built.as_ref().unwrap();
+        let model = self.model.as_ref().unwrap();
+        let mut phix = Vec::with_capacity(phi.cols);
+        built.apply(x, &mut phix);
+        // Rank-1 state of the augmented model (C_aug = C + u u^T/denom):
+        // never materialized — all downstream quantities use u directly.
+        let mut u = model.c.matvec(&phix);
+        for (ui, &pi) in u.iter_mut().zip(&phix) {
+            *ui -= pi;
+        }
+        let ptp_t = dot(&phix, &phix);
+        let ptcp_t = dot(&phix, &u) + ptp_t;
+        let denom_t = ptp_t + self.rho - ptcp_t;
+        // f(x) on Z and the residual base share one dot product (IEEE
+        // multiply commutes bitwise, so dot(w, phix) == dot(phix, w)).
+        let wdot = dot(&phix, &model.w);
+        let bs: Vec<f64> = (0..phi.rows).map(|i| dot(&u, phi.row(i))).collect();
+        PreparedTest {
+            u,
+            denom_t,
+            wdot,
+            bs,
+        }
+    }
+
+    /// The per-label half of `scores`: one O(q^2) w_aug construction
+    /// plus the O(q)-per-point LOO sweep (see the struct docs for the
+    /// scalar-cache algebra). Shared by `scores` and `scores_batch`, so
+    /// their outputs are bit-identical by construction.
+    fn scores_from_prepared(&self, st: &PreparedTest, y: Label) -> Scores {
+        let phi = self.phi.as_ref().expect("fit first");
+        let model = self.model.as_ref().unwrap();
+        let n = phi.rows;
+        let y_t = target(y);
+
+        // test score first: f trained on Z only
+        let test = -y_t * st.wdot;
+
+        let resid_t = st.wdot - y_t;
+        // w_aug = w + u * resid_t/denom_t
+        let coef_t = resid_t / st.denom_t;
+        let w_aug: Vec<f64> = model
+            .w
+            .iter()
+            .zip(&st.u)
+            .map(|(w, ui)| w + ui * coef_t)
+            .collect();
+
+        // LOO sweep, O(q) per point:
+        //   a_aug   = phi_i^T C_aug phi_i = pcp_i + b^2/denom_t,  b = u.phi_i
+        //   denom_i = -ptp_i + rho + a_aug          (decrement denominator)
+        //   f(x_i)  = phi_i^T w_aug - (a_aug - ptp_i) (phi_i^T w_aug - y_i)/denom_i
+        let mut train = Vec::with_capacity(n);
+        for i in 0..n {
+            let phi_i = phi.row(i);
+            let b = st.bs[i];
+            let d = dot(phi_i, &w_aug);
+            let a_aug = self.pcp[i] + b * b / st.denom_t;
+            let denom_i = -self.ptp[i] + self.rho + a_aug;
+            let resid = d - self.ys[i];
+            let fx = d - (a_aug - self.ptp[i]) * resid / denom_i;
+            train.push(-self.ys[i] * fx);
+        }
+        Scores { train, test }
+    }
+}
+
+/// Label-independent scoring state for one test object (LS-SVM).
+struct PreparedTest {
+    /// u = (C - I) phi_x
+    u: Vec<f64>,
+    /// incremental-add denominator for the test example
+    denom_t: f64,
+    /// phi_x . w (both f(x) on Z and the residual base)
+    wdot: f64,
+    /// b_i = u . phi_i per training point
+    bs: Vec<f64>,
 }
 
 impl CpMeasure for LsSvmOptimized {
@@ -391,52 +478,24 @@ impl CpMeasure for LsSvmOptimized {
     /// virtual decrement per training point (see the struct docs for
     /// the scalar-cache algebra).
     fn scores(&self, x: &[f64], y: Label) -> Scores {
-        let phi = self.phi.as_ref().expect("fit first");
-        let built = self.built.as_ref().unwrap();
-        let model = self.model.as_ref().unwrap();
-        let n = phi.rows;
-        let y_t = target(y);
-        let mut phix = Vec::with_capacity(phi.cols);
-        built.apply(x, &mut phix);
+        self.scores_from_prepared(&self.prepare_test(x), y)
+    }
 
-        // test score first: f trained on Z only
-        let test = -y_t * model.predict_phi(&phix);
-
-        // Rank-1 state of the augmented model (C_aug = C + u u^T/denom):
-        // never materialized — all downstream quantities use u directly.
-        let mut u = model.c.matvec(&phix);
-        for (ui, &pi) in u.iter_mut().zip(&phix) {
-            *ui -= pi;
+    /// Batched LS-SVM scoring: the O(q p) feature map, the O(q^2)
+    /// C-matvec of the rank-1 test-point update, and the O(n q)
+    /// projections b_i are computed ONCE per test object and reused
+    /// across every candidate label; only the O(n q) virtual-decrement
+    /// sweep runs per label. Bit-identical to per-pair
+    /// [`CpMeasure::scores`] (shared [`Self::scores_from_prepared`]).
+    fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
+        let mut out = Vec::with_capacity(xs.len() * labels.len());
+        for x in xs {
+            let st = self.prepare_test(x);
+            for &y in labels {
+                out.push(self.scores_from_prepared(&st, y));
+            }
         }
-        let ptp_t = dot(&phix, &phix);
-        let ptcp_t = dot(&phix, &u) + ptp_t;
-        let denom_t = ptp_t + self.rho - ptcp_t;
-        let resid_t = dot(&phix, &model.w) - y_t;
-        // w_aug = w + u * resid_t/denom_t
-        let coef_t = resid_t / denom_t;
-        let w_aug: Vec<f64> = model
-            .w
-            .iter()
-            .zip(&u)
-            .map(|(w, ui)| w + ui * coef_t)
-            .collect();
-
-        // LOO sweep, O(q) per point:
-        //   a_aug   = phi_i^T C_aug phi_i = pcp_i + b^2/denom_t,  b = u.phi_i
-        //   denom_i = -ptp_i + rho + a_aug          (decrement denominator)
-        //   f(x_i)  = phi_i^T w_aug - (a_aug - ptp_i) (phi_i^T w_aug - y_i)/denom_i
-        let mut train = Vec::with_capacity(n);
-        for i in 0..n {
-            let phi_i = phi.row(i);
-            let b = dot(&u, phi_i);
-            let d = dot(phi_i, &w_aug);
-            let a_aug = self.pcp[i] + b * b / denom_t;
-            let denom_i = -self.ptp[i] + self.rho + a_aug;
-            let resid = d - self.ys[i];
-            let fx = d - (a_aug - self.ptp[i]) * resid / denom_i;
-            train.push(-self.ys[i] * fx);
-        }
-        Scores { train, test }
+        out
     }
 
     fn n(&self) -> usize {
@@ -691,6 +750,41 @@ mod tests {
                 for (u, v) in a.train.iter().zip(&b.train) {
                     assert!((u - v).abs() < 1e-7, "{u} vs {v}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn scores_batch_bit_identical_to_single() {
+        let ds = small_ds(24, 9);
+        let probe = small_ds(5, 10);
+        let xs: Vec<&[f64]> = (0..probe.n()).map(|i| probe.row(i)).collect();
+        for map in [
+            FeatureMap::Linear,
+            FeatureMap::Rff {
+                q: 12,
+                gamma: 0.5,
+                seed: 3,
+            },
+        ] {
+            let mut o = LsSvmOptimized::new(1.0, map.clone());
+            let mut s = LsSvmStandard::new(1.0, map);
+            o.fit(&ds);
+            s.fit(&ds);
+            for m in [&o as &dyn CpMeasure, &s as &dyn CpMeasure] {
+                let batch = m.scores_batch(&xs, &[0, 1]);
+                assert_eq!(batch.len(), xs.len() * 2);
+                for (xi, x) in xs.iter().enumerate() {
+                    for y in 0..2usize {
+                        let single = m.scores(x, y);
+                        let got = &batch[xi * 2 + y];
+                        assert_eq!(got.test.to_bits(), single.test.to_bits());
+                        for (a, b) in got.train.iter().zip(&single.train) {
+                            assert_eq!(a.to_bits(), b.to_bits());
+                        }
+                    }
+                }
+                assert!(m.scores_batch(&[], &[0, 1]).is_empty());
             }
         }
     }

@@ -114,30 +114,75 @@ impl<M: CpMeasure> ExchangeabilityTest<M> {
 
     /// Process one observation: returns its smoothed p-value (None for
     /// the bootstrap observation) and updates the martingale.
+    ///
+    /// Exactly [`ExchangeabilityTest::observe_batch`] with a singleton
+    /// batch — one code path, no drift between the two.
     pub fn observe(&mut self, x: &[f64]) -> Option<f64> {
-        assert_eq!(x.len(), self.p);
+        self.observe_batch(&[x]).pop().unwrap()
+    }
+
+    /// Mini-batch variant of [`observe`]: scores every observation in
+    /// `xs` against the state at the start of the batch with one
+    /// [`CpMeasure::scores_batch`] call, then learns them all (in
+    /// order). Returns one entry per observation, `None` for the
+    /// bootstrap observation. Exception: when the tester is fresh
+    /// (`seen == 0`), the first observation bootstraps the measure and
+    /// the REST of the batch is scored against that post-bootstrap
+    /// state (a CP p-value needs at least one reference point).
+    ///
+    /// With `xs.len() == 1` this is exactly [`observe`] (same scores,
+    /// same RNG draws, same martingale updates). For larger batches the
+    /// p-values differ from the sequential tester in that observations
+    /// within one batch are not conditioned on each other — the
+    /// trade-off that lets a high-throughput stream amortize one
+    /// distance row per observation across the batch.
+    ///
+    /// Like [`observe`], this requires a measure with real incremental
+    /// `learn` support (the optimized variants): for measures whose
+    /// `learn` returns false, the fallback refit keeps only the latest
+    /// observation (the same degenerate completeness branch as
+    /// [`observe`]) and the martingale output is meaningless.
+    ///
+    /// [`observe`]: ExchangeabilityTest::observe
+    pub fn observe_batch(&mut self, xs: &[&[f64]]) -> Vec<Option<f64>> {
+        let mut out = Vec::with_capacity(xs.len());
+        let mut rest = xs;
         if self.seen == 0 {
-            // first point: fit the measure on a singleton dataset
-            let ds = Dataset::new(x.to_vec(), vec![0], self.p, 1);
+            let Some((first, tail)) = xs.split_first() else {
+                return out;
+            };
+            assert_eq!(first.len(), self.p);
+            let ds = Dataset::new(first.to_vec(), vec![0], self.p, 1);
             self.measure.fit(&ds);
             self.seen = 1;
-            return None;
+            out.push(None);
+            rest = tail;
         }
-        let scores = self.measure.scores(x, 0);
-        let tau = self.rng.f64();
-        let p = smoothed_p_value(&scores, tau);
-        self.martingale.update(p);
-        self.p_values.push(p);
-        if !self.measure.learn(x, 0) {
-            // standard measures: refit from scratch (the O(n^3) path)
-            let mut all = Dataset::new(Vec::new(), Vec::new(), self.p, 1);
-            // no direct access to the measure's data: caller should use
-            // optimized measures; this branch exists for completeness
-            all.push(x, 0);
-            self.measure.fit(&all);
+        if rest.is_empty() {
+            return out;
         }
-        self.seen += 1;
-        Some(p)
+        for x in rest {
+            assert_eq!(x.len(), self.p);
+        }
+        let scores = self.measure.scores_batch(rest, &[0]);
+        for (x, s) in rest.iter().zip(scores) {
+            let tau = self.rng.f64();
+            let p = smoothed_p_value(&s, tau);
+            self.martingale.update(p);
+            self.p_values.push(p);
+            if !self.measure.learn(x, 0) {
+                // non-incremental measures: degenerate refit keeping
+                // only the latest observation (no access to the
+                // measure's data; callers should use optimized
+                // measures — see the doc caveat above)
+                let mut all = Dataset::new(Vec::new(), Vec::new(), self.p, 1);
+                all.push(x, 0);
+                self.measure.fit(&all);
+            }
+            self.seen += 1;
+            out.push(Some(p));
+        }
+        out
     }
 
     /// Current log simple-mixture martingale (evidence against
@@ -213,6 +258,51 @@ mod tests {
                 ps.iter().filter(|&&p| p <= q).count() as f64 / ps.len() as f64;
             assert!((frac - q).abs() < 0.12, "F({q}) = {frac}");
         }
+    }
+
+    #[test]
+    fn observe_batch_of_one_equals_observe() {
+        let stream = stream_iid(80, 21);
+        let mut seq =
+            ExchangeabilityTest::new(KnnOptimized::new(3, true), 3, 9);
+        let mut bat =
+            ExchangeabilityTest::new(KnnOptimized::new(3, true), 3, 9);
+        for x in &stream {
+            let a = seq.observe(x);
+            let b = bat.observe_batch(&[x.as_slice()]);
+            assert_eq!(b.len(), 1);
+            assert_eq!(a, b[0]);
+        }
+        assert_eq!(seq.p_values, bat.p_values);
+        assert_eq!(seq.log_martingale(), bat.log_martingale());
+    }
+
+    #[test]
+    fn observe_batch_scores_against_batch_start_state() {
+        let stream = stream_iid(40, 22);
+        let mut t =
+            ExchangeabilityTest::new(KnnOptimized::new(3, true), 3, 10);
+        let (head, tail) = stream.split_at(30);
+        for x in head {
+            t.observe(x);
+        }
+        // scores from the frozen pre-batch state (what the batch must use)
+        let frozen: Vec<crate::cp::measure::Scores> =
+            tail.iter().map(|x| t.measure().scores(x, 0)).collect();
+        let rng_probe = t.rng.clone();
+        let xs: Vec<&[f64]> = tail.iter().map(|x| x.as_slice()).collect();
+        let got = t.observe_batch(&xs);
+        // replay the tau draws against the frozen scores
+        let mut rng = rng_probe;
+        for (s, p) in frozen.iter().zip(&got) {
+            let want = smoothed_p_value(s, rng.f64());
+            assert_eq!(p.unwrap(), want);
+        }
+        assert_eq!(got.len(), 10);
+        assert!(got.iter().all(|p| p.is_some()));
+        assert_eq!(t.p_values.len(), 29 + 10);
+        // all observations were learned
+        assert_eq!(t.measure().n(), 40);
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! PJRT-backed implementation (requires the `pjrt` cargo feature and
+//! the `xla` bindings crate from the rust_pallas toolchain image).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::engine::DistEngine;
+use crate::runtime::registry::Manifest;
+
+/// A PJRT CPU runtime with a lazily-populated executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: std::path::PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+// SAFETY: the underlying PJRT CPU client is thread-safe for compile and
+// execute; all mutable Rust-side state is behind the Mutex above.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Open the artifact directory (reads manifest.json, creates the
+    /// PJRT CPU client; compiles nothing yet).
+    pub fn open(dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading {dir}/manifest.json"))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            dir: dir.into(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `name` on f32 literals; returns the first tuple
+    /// element flattened to f32 (all model.py entry points return
+    /// 1-tuples except lssvm_update, which uses [`Self::run_multi`]).
+    pub fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let outs = self.run_raw(name, args, 1)?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Execute and unpack an `n_outputs`-tuple.
+    pub fn run_multi(
+        &self,
+        name: &str,
+        args: &[xla::Literal],
+        n_outputs: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.run_raw(name, args, n_outputs)
+    }
+
+    fn run_raw(
+        &self,
+        name: &str,
+        args: &[xla::Literal],
+        n_outputs: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(name) {
+            let file = self
+                .manifest
+                .file_for(name)
+                .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            cache.insert(name.to_string(), exe);
+        }
+        let exe = cache.get(name).unwrap();
+        let mut result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // model.py lowers with return_tuple=True
+        let tuple = result
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if tuple.len() < n_outputs {
+            bail!("{name}: expected {n_outputs} outputs, got {}", tuple.len());
+        }
+        tuple
+            .into_iter()
+            .take(n_outputs)
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Number of executables compiled so far (diagnostics / tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    // ---------------- typed entry points -----------------------------
+
+    /// Distance row via the `dist_row_n*_p*` Pallas artifact.
+    pub fn dist_row_sq_f32(
+        &self,
+        x: &[f64],
+        rows: &[f64],
+        p: usize,
+    ) -> Result<Vec<f64>> {
+        let n = rows.len() / p;
+        let (n_pad, p_pad) = self.manifest.bucket(n, p)?;
+        let name = format!("dist_row_n{n_pad}_p{p_pad}");
+        let x_lit = pad_literal(x, 1, p, 1, p_pad)?;
+        let b_lit = pad_literal(rows, n, p, n_pad, p_pad)?;
+        let out = self.run(&name, &[x_lit, b_lit])?;
+        Ok(out[..n].iter().map(|&v| v as f64).collect())
+    }
+
+    /// Gaussian kernel row via the fused `kde_row_*` artifact.
+    pub fn kde_row_f32(
+        &self,
+        x: &[f64],
+        rows: &[f64],
+        p: usize,
+        h2: f64,
+    ) -> Result<Vec<f64>> {
+        let n = rows.len() / p;
+        let (n_pad, p_pad) = self.manifest.bucket(n, p)?;
+        let name = format!("kde_row_n{n_pad}_p{p_pad}");
+        let x_lit = pad_literal(x, 1, p, 1, p_pad)?;
+        let b_lit = pad_literal(rows, n, p, n_pad, p_pad)?;
+        let h_lit = scalar_literal(h2)?;
+        let out = self.run(&name, &[x_lit, b_lit, h_lit])?;
+        Ok(out[..n].iter().map(|&v| v as f64).collect())
+    }
+
+    /// Fused Simplified-k-NN score update (§3.1) in one PJRT call.
+    #[allow(clippy::too_many_arguments)]
+    pub fn knn_update_f32(
+        &self,
+        x: &[f64],
+        rows: &[f64],
+        p: usize,
+        alpha_prov: &[f64],
+        delta_k: &[f64],
+        same_label: &[f64],
+    ) -> Result<Vec<f64>> {
+        let n = rows.len() / p;
+        let (n_pad, p_pad) = self.manifest.bucket(n, p)?;
+        let name = format!("knn_update_n{n_pad}_p{p_pad}");
+        let x_lit = pad_literal(x, 1, p, 1, p_pad)?;
+        let b_lit = pad_literal(rows, n, p, n_pad, p_pad)?;
+        // phantom rows: same_label = 0 makes the update a no-op for them
+        let a_lit = pad_vec_literal(alpha_prov, n_pad)?;
+        let d_lit = pad_vec_literal(delta_k, n_pad)?;
+        let s_lit = pad_vec_literal(same_label, n_pad)?;
+        let out = self.run(&name, &[x_lit, b_lit, a_lit, d_lit, s_lit])?;
+        Ok(out[..n].iter().map(|&v| v as f64).collect())
+    }
+}
+
+/// f64 row-major (n x p) -> zero-padded f32 literal of (n_pad x p_pad).
+fn pad_literal(
+    data: &[f64],
+    n: usize,
+    p: usize,
+    n_pad: usize,
+    p_pad: usize,
+) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), n * p);
+    let mut buf = vec![0f32; n_pad * p_pad];
+    for i in 0..n {
+        for j in 0..p {
+            buf[i * p_pad + j] = data[i * p + j] as f32;
+        }
+    }
+    xla::Literal::vec1(&buf)
+        .reshape(&[n_pad as i64, p_pad as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// f64 vector -> zero-padded f32 rank-1 literal of length n_pad.
+fn pad_vec_literal(data: &[f64], n_pad: usize) -> Result<xla::Literal> {
+    let mut buf = vec![0f32; n_pad];
+    for (b, &v) in buf.iter_mut().zip(data) {
+        *b = v as f32;
+    }
+    Ok(xla::Literal::vec1(&buf))
+}
+
+/// scalar -> (1,1) f32 literal.
+fn scalar_literal(v: f64) -> Result<xla::Literal> {
+    xla::Literal::vec1(&[v as f32])
+        .reshape(&[1, 1])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// [`DistEngine`] adapter: lets the optimized measures run their
+/// distance hot-spot through the AOT Pallas kernels. Falls back to the
+/// native loops when inputs exceed every bucket.
+pub struct PjrtEngine {
+    rt: std::sync::Arc<PjrtRuntime>,
+}
+
+impl PjrtEngine {
+    pub fn new(rt: std::sync::Arc<PjrtRuntime>) -> Self {
+        PjrtEngine { rt }
+    }
+}
+
+impl DistEngine for PjrtEngine {
+    fn dist_row_sq(&self, x: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        match self.rt.dist_row_sq_f32(x, rows, p) {
+            Ok(v) => out.copy_from_slice(&v),
+            Err(_) => crate::linalg::distance::dist_row_sq_into(x, rows, p, out),
+        }
+    }
+
+    fn kde_row(&self, x: &[f64], rows: &[f64], p: usize, h2: f64, out: &mut [f64]) {
+        match self.rt.kde_row_f32(x, rows, p, h2) {
+            Ok(v) => out.copy_from_slice(&v),
+            Err(_) => {
+                crate::linalg::distance::dist_row_sq_into(x, rows, p, out);
+                for v in out.iter_mut() {
+                    *v = (-*v / (2.0 * h2)).exp();
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,103 @@
+//! API-compatible stub for the PJRT runtime, compiled when the `pjrt`
+//! cargo feature is off (the offline default: the `xla` bindings crate
+//! is only available inside the rust_pallas toolchain image).
+//!
+//! Every constructor fails cleanly, so all call sites — the engine
+//! factory, the benches, and the integration tests — take their
+//! documented "artifacts unavailable" fallback path: the native Rust
+//! kernels. The typed entry points exist so code written against the
+//! real runtime type-checks unchanged.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::engine::DistEngine;
+use crate::runtime::registry::Manifest;
+
+/// Stub PJRT runtime: [`PjrtRuntime::open`] always fails.
+pub struct PjrtRuntime {
+    manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Always fails: PJRT support is not compiled in. Build with
+    /// `--features pjrt` (and the `xla` dependency) for the real thing.
+    pub fn open(_dir: &str) -> Result<Self> {
+        bail!("PJRT support not compiled in (enable the `pjrt` feature)")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Number of executables compiled so far (always 0 for the stub).
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+
+    // ---------------- typed entry points -----------------------------
+    // Unreachable in practice (open() never succeeds) but kept
+    // signature-compatible with the real runtime.
+
+    pub fn dist_row_sq_f32(
+        &self,
+        _x: &[f64],
+        _rows: &[f64],
+        _p: usize,
+    ) -> Result<Vec<f64>> {
+        bail!("PJRT support not compiled in")
+    }
+
+    pub fn kde_row_f32(
+        &self,
+        _x: &[f64],
+        _rows: &[f64],
+        _p: usize,
+        _h2: f64,
+    ) -> Result<Vec<f64>> {
+        bail!("PJRT support not compiled in")
+    }
+
+    pub fn knn_update_f32(
+        &self,
+        _x: &[f64],
+        _rows: &[f64],
+        _p: usize,
+        _alpha_prov: &[f64],
+        _delta_k: &[f64],
+        _same_label: &[f64],
+    ) -> Result<Vec<f64>> {
+        bail!("PJRT support not compiled in")
+    }
+}
+
+/// Stub engine: delegates every kernel to the native loops.
+pub struct PjrtEngine {
+    _rt: std::sync::Arc<PjrtRuntime>,
+}
+
+impl PjrtEngine {
+    pub fn new(rt: std::sync::Arc<PjrtRuntime>) -> Self {
+        PjrtEngine { _rt: rt }
+    }
+}
+
+impl DistEngine for PjrtEngine {
+    fn dist_row_sq(&self, x: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        crate::linalg::distance::dist_row_sq_into(x, rows, p, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_open_fails_cleanly() {
+        let e = PjrtRuntime::open("artifacts").unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+}

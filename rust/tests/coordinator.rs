@@ -155,6 +155,58 @@ fn concurrent_clients_get_consistent_answers() {
 }
 
 #[test]
+fn mixed_deployment_batches_route_correctly() {
+    // Concurrent traffic for two deployments lands in shared dynamic
+    // batches; the worker must group per deployment and every client
+    // must get the answer for ITS deployment, identical to the
+    // unbatched single-object path.
+    let reg = registry(60);
+    let expected_sknn = reg
+        .with("sknn", |d| d.p_values(&[0.1; 30]))
+        .unwrap();
+    let expected_kde = reg
+        .with("kde", |d| d.p_values(&[0.1; 30]))
+        .unwrap();
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 2,
+            max_batch: 16,
+            max_wait_us: 2_000,
+            ..Default::default()
+        },
+        reg,
+    ));
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for dep in ["sknn", "kde", "sknn", "kde", "sknn", "kde"] {
+            let srv = server.clone();
+            handles.push(s.spawn(move || {
+                let req = Json::parse(&format!(
+                    r#"{{"op":"predict","deployment":"{dep}","x":{},"epsilon":0.1}}"#,
+                    x30()
+                ))
+                .unwrap();
+                (dep, srv.handle(&req))
+            }));
+        }
+        for h in handles {
+            let (dep, resp) = h.join().unwrap();
+            let ps = resp
+                .get("p_values")
+                .unwrap_or_else(|| panic!("{dep}: {}", resp.encode()))
+                .as_f64_vec()
+                .unwrap();
+            let want = if dep == "sknn" {
+                &expected_sknn
+            } else {
+                &expected_kde
+            };
+            assert_eq!(&ps, want, "{dep} answer must match unbatched path");
+        }
+    });
+}
+
+#[test]
 fn unlearn_then_predict_still_works() {
     let reg = registry(50);
     let server = Arc::new(Server::start(ServeConfig::default(), reg));

@@ -1,0 +1,147 @@
+//! Golden p-value regression fixtures.
+//!
+//! A fixed, hard-coded dataset is scored through `FullCp::p_values_batch`
+//! for each deterministic measure (standard AND optimized variants) and
+//! compared against checked-in expected p-values, so future refactors of
+//! the scoring engine cannot silently shift p-values.
+//!
+//! The expected values were computed by an independent reference
+//! implementation of the *standard* measure definitions (straight from
+//! the paper's formulas — Eq. 2 k-NN, §4 KDE, §5 LS-SVM ridge closed
+//! form). p-values are counts over score comparisons whose minimum
+//! relative margin on this dataset is ~3e-5, so they are robust to any
+//! plausible float-level difference (libm ulps, summation order,
+//! rank-1-update vs refactorization noise, all <= ~1e-9 relative).
+//!
+//! Random Forest is covered by determinism/shape assertions instead of
+//! an external golden: its scores depend on the in-tree xoshiro RNG
+//! stream driving bootstrap draws and tree fitting, which no external
+//! reference can reproduce; its batch-vs-single exactness is enforced
+//! bit-for-bit by `proptests.rs`.
+
+use exact_cp::config::{MeasureConfig, MeasureKind};
+use exact_cp::coordinator::factory::{build_measure, build_standard_measure};
+use exact_cp::cp::FullCp;
+use exact_cp::data::Dataset;
+use exact_cp::measures::{BootstrapOptimized, BootstrapParams};
+
+/// 24 x 3 training matrix (two Gaussian clusters, labels alternating).
+#[rustfmt::skip]
+const X: [f64; 72] = [
+    1.8689, -1.8382, -1.8353, 3.0792, 3.2826, 1.4304,
+    -0.8888, -1.3879, -1.727, 2.7131, 2.71, 0.1144,
+    -1.329, 1.0978, 0.7667, 2.7225, 2.3393, 3.1279,
+    0.1184, 1.2551, -0.0323, 2.033, 2.353, 3.0523,
+    0.6885, 0.477, 0.9824, 3.6626, 2.6977, 3.6707,
+    0.9283, 0.9368, -0.4664, 2.781, 2.4908, 2.7889,
+    -0.9325, -1.0851, 2.6148, 2.0149, 1.6608, 3.6226,
+    -1.1739, 0.4471, 1.2732, 3.6216, 2.5469, 1.5857,
+    -0.2189, -0.6261, 1.1392, 2.8734, 1.0989, 2.5236,
+    1.5275, -1.1739, -0.0394, 2.9779, 2.1853, 3.7047,
+    0.6465, 1.5011, -0.9071, 0.8411, 1.6495, 2.0831,
+    0.0166, 0.2737, -1.7988, 2.9863, 1.0917, 3.1274,
+];
+
+/// Probes: near cluster 0, near cluster 1, boundary, far outlier.
+#[rustfmt::skip]
+const PROBES: [[f64; 3]; 4] = [
+    [0.2178, -0.5564, 0.9613],
+    [2.086, 3.5415, 3.6043],
+    [1.3028, 1.056, 1.9506],
+    [4.9996, -4.2977, 6.3195],
+];
+
+fn train_ds() -> Dataset {
+    let y: Vec<usize> = (0..24).map(|i| i % 2).collect();
+    Dataset::new(X.to_vec(), y, 3, 2)
+}
+
+/// Golden per-probe [p(y=0), p(y=1)] rows (all multiples of 1/25).
+fn golden(kind: MeasureKind) -> [[f64; 2]; 4] {
+    match kind {
+        MeasureKind::SimplifiedKnn => {
+            [[0.68, 0.04], [0.04, 0.44], [0.20, 0.44], [0.04, 0.04]]
+        }
+        MeasureKind::Knn => {
+            [[0.68, 0.04], [0.04, 0.72], [0.04, 0.12], [0.04, 0.08]]
+        }
+        MeasureKind::Kde => {
+            [[0.64, 0.04], [0.04, 0.52], [0.20, 0.48], [0.04, 0.04]]
+        }
+        MeasureKind::LsSvm => {
+            [[0.40, 0.44], [0.04, 0.96], [0.04, 0.52], [0.04, 0.60]]
+        }
+        MeasureKind::RandomForest => unreachable!("no external golden"),
+    }
+}
+
+fn assert_rows_match(kind: MeasureKind, variant: &str, rows: &[Vec<f64>]) {
+    let want = golden(kind);
+    assert_eq!(rows.len(), want.len());
+    for (i, (row, want_row)) in rows.iter().zip(&want).enumerate() {
+        assert_eq!(row.len(), 2);
+        for (y, (&got, &want)) in row.iter().zip(want_row).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-9,
+                "{kind:?} ({variant}) probe={i} y={y}: got {got}, want {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_pvalues_deterministic_measures() {
+    let ds = train_ds();
+    let cfg = MeasureConfig {
+        k: 3,
+        h: 1.0,
+        rho: 1.0,
+        ..Default::default()
+    };
+    let xs: Vec<&[f64]> = PROBES.iter().map(|p| p.as_slice()).collect();
+    for kind in [
+        MeasureKind::SimplifiedKnn,
+        MeasureKind::Knn,
+        MeasureKind::Kde,
+        MeasureKind::LsSvm,
+    ] {
+        let opt = FullCp::train(build_measure(kind, &cfg, None), &ds);
+        assert_rows_match(kind, "optimized", &opt.p_values_batch(&xs));
+        let std_cp = FullCp::train(build_standard_measure(kind, &cfg), &ds);
+        assert_rows_match(kind, "standard", &std_cp.p_values_batch(&xs));
+        // the batch path must agree with the single-object path too
+        for (x, row) in xs.iter().zip(opt.p_values_batch(&xs)) {
+            assert_eq!(row, opt.p_values(x), "{kind:?} batch vs single");
+        }
+    }
+}
+
+#[test]
+fn golden_random_forest_is_deterministic_and_valid() {
+    // No external golden (in-tree RNG drives bootstrap + tree fits);
+    // instead: two fresh instances agree exactly, the batch path equals
+    // the single path (also enforced by proptests), and p-values are
+    // valid multiples of 1/(n+1).
+    let ds = train_ds();
+    let params = BootstrapParams {
+        b: 5,
+        ..Default::default()
+    };
+    let xs: Vec<&[f64]> = PROBES.iter().map(|p| p.as_slice()).collect();
+    let a = FullCp::train(BootstrapOptimized::new(params.clone()), &ds);
+    let b = FullCp::train(BootstrapOptimized::new(params), &ds);
+    let rows_a = a.p_values_batch(&xs);
+    let rows_b = b.p_values_batch(&xs);
+    assert_eq!(rows_a, rows_b, "fresh instances must agree exactly");
+    for (x, row) in xs.iter().zip(&rows_a) {
+        assert_eq!(row, &a.p_values(x), "batch vs single");
+        for &p in row {
+            assert!((1.0 / 25.0..=1.0).contains(&p), "p out of range: {p}");
+            let scaled = p * 25.0;
+            assert!(
+                (scaled - scaled.round()).abs() < 1e-9,
+                "p not a multiple of 1/25: {p}"
+            );
+        }
+    }
+}

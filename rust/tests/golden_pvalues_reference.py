@@ -1,0 +1,209 @@
+#!/usr/bin/env python3
+"""Reference implementation generating golden p-values for
+golden_pvalues.rs (same directory).
+
+Replicates the *standard* variants of the Rust measures (knn.rs,
+kde.rs, lssvm.rs) on a fixed, hard-coded dataset. p-values are counts
+(#{alpha_i >= alpha_test}+1)/(n+1), so they are robust to <=1e-9 score
+noise as long as every comparison margin is large; this script asserts
+the margins.
+"""
+import math
+import random
+
+N, P = 24, 3
+K = 3
+H = 1.0
+RHO = 1.0
+NPROBE = 4
+
+rng = random.Random(20260728)
+
+def gen_point(center, spread=1.0):
+    return [round(center[j] + rng.gauss(0, spread), 4) for j in range(P)]
+
+C0 = (0.0, 0.0, 0.0)
+C1 = (2.5, 2.5, 2.5)
+
+X, Y = [], []
+for i in range(N):
+    c = i % 2
+    X.append(gen_point(C0 if c == 0 else C1))
+    Y.append(c)
+
+PROBES = [
+    gen_point(C0),            # clearly class 0
+    gen_point(C1),            # clearly class 1
+    gen_point((1.25, 1.25, 1.25)),  # boundary
+    gen_point((6.0, -4.0, 6.0)),    # outlier
+]
+
+def dist(a, b):
+    s = 0.0
+    for u, v in zip(a, b):
+        d = u - v
+        s += d * d
+    return math.sqrt(s)
+
+def ksum(vals, k):
+    vals = sorted(vals)[:k]
+    if not vals:
+        return (0, float("inf"))
+    return (len(vals), math.fsum(vals))
+
+def knn_ratio(nl, num, dl, den):
+    if nl == 0 and dl == 0:
+        return 1.0
+    if nl == 0:
+        return float("inf")
+    if dl == 0:
+        return 0.0
+    if den == 0.0:
+        return 1.0 if num == 0.0 else float("inf")
+    return num / den
+
+def knn_scores(x, y, simplified):
+    """standard (simplified-)knn: returns (train list, test)."""
+    train = []
+    for i in range(N):
+        same, diff = [], []
+        for j in range(N):
+            if j == i:
+                continue
+            d = dist(X[i], X[j])
+            (same if Y[j] == Y[i] else diff).append(d)
+        dtest = dist(X[i], x)
+        (same if y == Y[i] else diff).append(dtest)
+        nl, num = ksum(same, K)
+        if simplified:
+            train.append(num if nl else float("inf"))
+        else:
+            dl, den = ksum(diff, K)
+            train.append(knn_ratio(nl, num, dl, den))
+    same = [dist(x, X[j]) for j in range(N) if Y[j] == y]
+    diff = [dist(x, X[j]) for j in range(N) if Y[j] != y]
+    nl, num = ksum(same, K)
+    if simplified:
+        test = num if nl else float("inf")
+    else:
+        dl, den = ksum(diff, K)
+        test = knn_ratio(nl, num, dl, den)
+    return train, test
+
+def kern(a, b):
+    d2 = 0.0
+    for u, v in zip(a, b):
+        d = u - v
+        d2 += d * d
+    return math.exp(-d2 / (2.0 * H * H))
+
+def kde_scores(x, y):
+    counts = [Y.count(c) for c in range(2)]
+    train = []
+    for i in range(N):
+        s = math.fsum(kern(X[i], X[j]) for j in range(N)
+                      if j != i and Y[j] == Y[i])
+        ny = counts[Y[i]] - 1
+        if y == Y[i]:
+            s += kern(X[i], x)
+            ny += 1
+        train.append(-(s / ny) if ny else 0.0)
+    s = math.fsum(kern(x, X[j]) for j in range(N) if Y[j] == y)
+    test = -(s / counts[y]) if counts[y] else 0.0
+    return train, test
+
+def solve3(A, b):
+    """Gaussian elimination with partial pivoting, 3x3."""
+    A = [row[:] for row in A]
+    b = b[:]
+    n = len(b)
+    for c in range(n):
+        piv = max(range(c, n), key=lambda r: abs(A[r][c]))
+        A[c], A[piv] = A[piv], A[c]
+        b[c], b[piv] = b[piv], b[c]
+        for r in range(c + 1, n):
+            f = A[r][c] / A[c][c]
+            for cc in range(c, n):
+                A[r][cc] -= f * A[c][cc]
+            b[r] -= f * b[c]
+    x = [0.0] * n
+    for r in range(n - 1, -1, -1):
+        s = b[r] - sum(A[r][cc] * x[cc] for cc in range(r + 1, n))
+        x[r] = s / A[r][r]
+    return x
+
+def ridge_w(rows, ts):
+    A = [[sum(r[i] * r[j] for r in rows) + (RHO if i == j else 0.0)
+          for j in range(P)] for i in range(P)]
+    b = [sum(t * r[i] for r, t in zip(rows, ts)) for i in range(P)]
+    return solve3(A, b)
+
+def lssvm_scores(x, y):
+    t = -1.0 if y == 0 else 1.0
+    ts = [-1.0 if c == 0 else 1.0 for c in Y]
+    aug = X + [x]
+    taug = ts + [t]
+    train = []
+    for i in range(N):
+        rows = [aug[j] for j in range(N + 1) if j != i]
+        tt = [taug[j] for j in range(N + 1) if j != i]
+        w = ridge_w(rows, tt)
+        f = sum(wi * xi for wi, xi in zip(w, X[i]))
+        train.append(-ts[i] * f)
+    w = ridge_w(X, ts)
+    f = sum(wi * xi for wi, xi in zip(w, x))
+    test = -t * f
+    return train, test
+
+def p_value(train, test):
+    ge = sum(1 for a in train if a >= test)
+    return (ge + 1) / (N + 1)
+
+def margin(train, test):
+    finite = [abs(a - test) / (1.0 + abs(test))
+              for a in train if math.isfinite(a) and math.isfinite(test)]
+    return min(finite) if finite else float("inf")
+
+MEASURES = {
+    "simplified-knn": lambda x, y: knn_scores(x, y, True),
+    "knn": lambda x, y: knn_scores(x, y, False),
+    "kde": kde_scores,
+    "lssvm": lssvm_scores,
+}
+
+golden = {}
+min_margin = float("inf")
+for name, fn in MEASURES.items():
+    rows = []
+    for x in PROBES:
+        row = []
+        for y in range(2):
+            tr, te = fn(x, y)
+            m = margin(tr, te)
+            min_margin = min(min_margin, m)
+            if m < 1e-6:
+                print(f"WARNING: tight margin {m:.2e} for {name} x={x} y={y}")
+            row.append(p_value(tr, te))
+        rows.append(row)
+    golden[name] = rows
+
+print(f"min relative margin: {min_margin:.3e}")
+print()
+
+def fmt_row(vals, per=6):
+    return ", ".join(f"{v}" for v in vals)
+
+print("// ---- training set (24 x 3, labels alternate 0/1) ----")
+flat = [v for row in X for v in row]
+print("X flat:")
+for i in range(0, len(flat), 6):
+    print("    " + ", ".join(f"{v}" for v in flat[i:i+6]) + ",")
+print("Y:", Y)
+print("PROBES:")
+for p in PROBES:
+    print("    " + ", ".join(f"{v}" for v in p) + ",")
+print()
+for name, rows in golden.items():
+    print(f"{name}:")
+    for r in rows:
+        print("    ", r)

@@ -122,6 +122,125 @@ fn prop_optimized_equals_standard_nn_family() {
     });
 }
 
+/// Bit-for-bit equality of one `Scores` pair.
+fn scores_identical(
+    a: &exact_cp::cp::measure::Scores,
+    b: &exact_cp::cp::measure::Scores,
+) -> bool {
+    a.train.len() == b.train.len()
+        && a.test.to_bits() == b.test.to_bits()
+        && a.train
+            .iter()
+            .zip(&b.train)
+            .all(|(u, v)| u.to_bits() == v.to_bits())
+}
+
+#[test]
+fn prop_scores_batch_equals_per_pair_bitwise() {
+    // THE batch contract: for every measure kind, optimized AND
+    // standard variants, scores_batch over random (xs, labels) equals
+    // the per-pair scores() cross product bit for bit.
+    check("batch-vs-single", 12, |c| {
+        let train = dataset(c);
+        let probe = dataset(Case {
+            n: 8,
+            seed: c.seed + 9,
+            ..c
+        });
+        let cfg = MeasureConfig {
+            k: c.k,
+            b: 2,
+            ..Default::default()
+        };
+        let labels: Vec<usize> = (0..train.n_labels).collect();
+        for kind in MeasureKind::all() {
+            for standard in [false, true] {
+                let mut m = if standard {
+                    build_standard_measure(kind, &cfg)
+                } else {
+                    build_measure(kind, &cfg, None)
+                };
+                m.fit(&train);
+                // the standard RF baseline retrains B(n+1) trees per
+                // pair — keep its batch small so the property stays fast
+                let n_probe = if kind == MeasureKind::RandomForest && standard
+                {
+                    2
+                } else {
+                    probe.n()
+                };
+                let xs: Vec<&[f64]> =
+                    (0..n_probe).map(|i| probe.row(i)).collect();
+                let batch = m.scores_batch(&xs, &labels);
+                if batch.len() != xs.len() * labels.len() {
+                    return false;
+                }
+                for (xi, x) in xs.iter().enumerate() {
+                    for (li, &y) in labels.iter().enumerate() {
+                        let single = m.scores(x, y);
+                        if !scores_identical(
+                            &batch[xi * labels.len() + li],
+                            &single,
+                        ) {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_scores_batch_edge_cases() {
+    // empty batch, empty label set, and single-pair batches must all
+    // behave for every measure kind and variant
+    let train = dataset(Case {
+        n: 14,
+        p: 4,
+        k: 3,
+        seed: 77,
+    });
+    let probe = dataset(Case {
+        n: 2,
+        p: 4,
+        k: 3,
+        seed: 78,
+    });
+    let cfg = MeasureConfig {
+        k: 3,
+        b: 2,
+        ..Default::default()
+    };
+    let labels: Vec<usize> = (0..train.n_labels).collect();
+    for kind in MeasureKind::all() {
+        for standard in [false, true] {
+            let mut m = if standard {
+                build_standard_measure(kind, &cfg)
+            } else {
+                build_measure(kind, &cfg, None)
+            };
+            m.fit(&train);
+            assert!(
+                m.scores_batch(&[], &labels).is_empty(),
+                "{kind:?} standard={standard}: empty xs"
+            );
+            let xs: Vec<&[f64]> = vec![probe.row(0)];
+            assert!(
+                m.scores_batch(&xs, &[]).is_empty(),
+                "{kind:?} standard={standard}: empty labels"
+            );
+            let one = m.scores_batch(&xs, &[1]);
+            assert_eq!(one.len(), 1);
+            assert!(
+                scores_identical(&one[0], &m.scores(probe.row(0), 1)),
+                "{kind:?} standard={standard}: single pair"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_pvalues_in_valid_range() {
     // p in [1/(n+1), 1] for every measure and candidate label

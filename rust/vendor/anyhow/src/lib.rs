@@ -1,0 +1,190 @@
+//! Minimal in-tree shim for the `anyhow` crate.
+//!
+//! The build environment is offline (no crates.io), so this crate
+//! provides the subset of anyhow's API that exact-cp actually uses:
+//!
+//! * [`Error`] — an opaque, `Display`able error value;
+//! * [`Result`] — `Result<T, Error>` with a defaultable error type;
+//! * [`anyhow!`] / [`bail!`] — format-style error construction;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (both foreign errors and `anyhow::Error`) and on `Option`.
+//!
+//! Semantics match upstream where it matters here: any
+//! `std::error::Error + Send + Sync + 'static` converts via `?`,
+//! context wraps as `"{context}: {source}"`, and `Error` deliberately
+//! does NOT implement `std::error::Error` (exactly like upstream, so
+//! the blanket `From` impl cannot conflict with `From<Error>`).
+
+use std::fmt;
+
+/// Opaque error: a rendered message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prepend a context layer.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Render the source chain eagerly; the shim stores no boxes.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>`: defaultable error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn context_layers_compose() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: boom");
+        let e2: Result<()> = Err(e);
+        let e2 = e2.with_context(|| format!("run {}", 7)).unwrap_err();
+        assert_eq!(e2.to_string(), "run 7: reading config: boom");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let e = none.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        assert_eq!(Some(3u8).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("bad flag {flag:?}");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "bad flag true");
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(format!("{e}"), "x = 42");
+        assert_eq!(format!("{e:?}"), "x = 42");
+    }
+}
