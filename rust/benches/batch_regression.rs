@@ -1,0 +1,124 @@
+//! Bench: batched regression intervals vs the per-object loop — the
+//! serving-path speedup `coefficients_batch` exists for.
+//!
+//! A 64-object batch (the acceptance shape) is pushed through
+//! `predict_region` two ways for each CP regressor:
+//!
+//! * **per-object** — `predict_region(x, eps)` per test object: the
+//!   standard k-NN variant recomputes the O(n^2) neighbour-statistics
+//!   pass per object, ridge recomputes `M0 (X^T Y)` per object;
+//! * **batched** — one `predict_region_batch(xs, eps)` call: the
+//!   test-independent work is hoisted once per batch.
+//!
+//! Outputs are asserted bit-identical before timing (the exactness
+//! contract of `src/regression/`), then each path is timed and the
+//! speedup printed. The standard k-NN variant must clear 2x at batch 64
+//! — its per-object O(n^2) term is the whole point of the hoist; the
+//! optimized variant and ridge only save a row/matvec per object, so
+//! their speedups are reported but not gated.
+
+use std::time::Duration;
+
+use exact_cp::data::{make_regression, RegressionSpec};
+use exact_cp::regression::{
+    CpRegressor, KnnRegressorOptimized, KnnRegressorStandard, RidgeCp,
+};
+
+fn assert_batch_matches(r: &dyn CpRegressor, xs: &[&[f64]], eps: f64) {
+    let batch = r.coefficients_batch(xs);
+    assert_eq!(batch.len(), xs.len());
+    for (got, &x) in batch.iter().zip(xs) {
+        let (sc, sa, sb) = r.coefficients(x);
+        assert_eq!(got.1.to_bits(), sa.to_bits());
+        assert_eq!(got.2.to_bits(), sb.to_bits());
+        assert_eq!(got.0.len(), sc.len());
+        for (u, v) in got.0.iter().zip(&sc) {
+            assert_eq!(u.0.to_bits(), v.0.to_bits());
+            assert_eq!(u.1.to_bits(), v.1.to_bits());
+        }
+    }
+    let regions = r.predict_region_batch(xs, eps);
+    for (got, &x) in regions.iter().zip(xs) {
+        assert_eq!(*got, r.predict_region(x, eps));
+    }
+}
+
+/// Times both paths and returns the speedup factor.
+fn bench_regressor(
+    r: &dyn CpRegressor,
+    xs: &[&[f64]],
+    eps: f64,
+    budget: Duration,
+) -> f64 {
+    let name = r.name();
+    assert_batch_matches(r, xs, eps);
+    let t_single = exact_cp::bench_harness::timing::microbench(
+        &format!("{name}: per-object loop"),
+        budget,
+        || {
+            xs.iter()
+                .map(|&x| r.predict_region(x, eps).total_width())
+                .sum::<f64>()
+        },
+    );
+    let t_batch = exact_cp::bench_harness::timing::microbench(
+        &format!("{name}: predict_region_batch"),
+        budget,
+        || {
+            r.predict_region_batch(xs, eps)
+                .iter()
+                .map(|reg| reg.total_width())
+                .sum::<f64>()
+        },
+    );
+    let speedup = t_single / t_batch;
+    println!("{name}: batched speedup {speedup:.2}x");
+    speedup
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let budget = Duration::from_millis(if quick { 150 } else { 1000 });
+    let n = if quick { 256 } else { 512 };
+    let m_test = 64usize;
+    let eps = 0.1;
+
+    let train = make_regression(
+        &RegressionSpec {
+            n_samples: n,
+            n_features: 6,
+            n_informative: 4,
+            noise: 4.0,
+        },
+        1,
+    );
+    let probe = make_regression(
+        &RegressionSpec {
+            n_samples: m_test,
+            n_features: 6,
+            n_informative: 4,
+            noise: 4.0,
+        },
+        2,
+    );
+    let xs: Vec<&[f64]> = (0..probe.n()).map(|i| probe.row(i)).collect();
+
+    println!(
+        "== batch_regression: {m_test} objects at n={n}, eps={eps} =="
+    );
+    let mut standard = KnnRegressorStandard::new(5);
+    standard.fit(&train);
+    let speedup = bench_regressor(&standard, &xs, eps, budget);
+    assert!(
+        speedup >= 2.0,
+        "standard k-NN batch speedup {speedup:.2}x below the 2x bar"
+    );
+
+    let mut optimized = KnnRegressorOptimized::new(5);
+    optimized.fit(&train);
+    bench_regressor(&optimized, &xs, eps, budget);
+
+    let mut ridge = RidgeCp::new(1.0);
+    ridge.fit(&train);
+    bench_regressor(&ridge, &xs, eps, budget);
+}

@@ -87,4 +87,24 @@ fn main() {
         "optimized regressor must match Papadopoulos et al. exactly"
     );
     println!("exactness vs Papadopoulos-2011: regions identical ✓");
+
+    // batched serving path: the test-independent work is hoisted once
+    // per batch, and the results are bit-identical to the per-object
+    // loop (the exactness contract of `exact_cp::regression`)
+    let m_batch = 16.min(test.n());
+    let xs: Vec<&[f64]> = (0..m_batch).map(|i| test.row(i)).collect();
+    let t0 = std::time::Instant::now();
+    let batch = knn.predict_region_batch(&xs, eps);
+    let t_batch = t0.elapsed();
+    for (region, &xi) in batch.iter().zip(&xs) {
+        assert_eq!(*region, knn.predict_region(xi, eps), "batch == single");
+    }
+    let ps = ridge.p_values_batch(&xs, &test.y[..m_batch]);
+    for (i, &xi) in xs.iter().enumerate() {
+        assert_eq!(ps[i], ridge.p_value(xi, test.y[i]), "batch p-value");
+    }
+    println!(
+        "batched API smoke test: {m_batch} regions in {t_batch:?}, \
+         bit-identical to the per-object loop ✓"
+    );
 }

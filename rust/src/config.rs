@@ -55,6 +55,47 @@ impl std::str::FromStr for MeasureKind {
     }
 }
 
+/// Which CP regressor a regression deployment uses (§8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RegressorKind {
+    /// optimized k-NN regressor (precomputed neighbour statistics)
+    Knn,
+    /// standard Papadopoulos et al. (2011) k-NN regressor
+    KnnStandard,
+    /// ridge RRCM with Sherman–Morrison updates
+    Ridge,
+}
+
+impl RegressorKind {
+    pub fn all() -> [RegressorKind; 3] {
+        [
+            RegressorKind::Knn,
+            RegressorKind::KnnStandard,
+            RegressorKind::Ridge,
+        ]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RegressorKind::Knn => "knn-reg",
+            RegressorKind::KnnStandard => "knn-reg-standard",
+            RegressorKind::Ridge => "ridge",
+        }
+    }
+}
+
+impl std::str::FromStr for RegressorKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "knn-reg" | "knn-regression" => RegressorKind::Knn,
+            "knn-reg-standard" => RegressorKind::KnnStandard,
+            "ridge" | "rrcm" => RegressorKind::Ridge,
+            other => anyhow::bail!("unknown regressor {other:?}"),
+        })
+    }
+}
+
 /// Measure hyperparameters (paper App. E defaults).
 #[derive(Clone, Debug)]
 pub struct MeasureConfig {
@@ -259,5 +300,18 @@ mod tests {
             MeasureKind::RandomForest
         );
         assert!(MeasureKind::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn regressor_kind_round_trips() {
+        use std::str::FromStr;
+        for kind in RegressorKind::all() {
+            assert_eq!(RegressorKind::from_str(kind.as_str()).unwrap(), kind);
+        }
+        assert_eq!(
+            RegressorKind::from_str("rrcm").unwrap(),
+            RegressorKind::Ridge
+        );
+        assert!(RegressorKind::from_str("bogus").is_err());
     }
 }

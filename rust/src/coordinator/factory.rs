@@ -1,14 +1,18 @@
-//! Measure factory: configuration -> boxed nonconformity measure.
+//! Measure factory: configuration -> boxed nonconformity measure
+//! (classification) or boxed CP regressor (regression).
 
 use std::sync::Arc;
 
-use crate::config::{MeasureConfig, MeasureKind};
+use crate::config::{MeasureConfig, MeasureKind, RegressorKind};
 use crate::cp::measure::CpMeasure;
 use crate::linalg::engine::Engine;
 use crate::measures::{
     BootstrapOptimized, BootstrapParams, BootstrapStandard, FeatureMap,
     KdeOptimized, KdeStandard, KnnOptimized, KnnStandard, LsSvmOptimized,
     LsSvmStandard,
+};
+use crate::regression::{
+    CpRegressor, KnnRegressorOptimized, KnnRegressorStandard, RidgeCp,
 };
 use crate::runtime::{PjrtEngine, PjrtRuntime};
 
@@ -70,6 +74,24 @@ pub fn build_standard_measure(
     }
 }
 
+/// Build a CP regressor (k from `cfg.k`, rho from `cfg.rho`).
+pub fn build_regressor(
+    kind: RegressorKind,
+    cfg: &MeasureConfig,
+    engine: Option<Engine>,
+) -> Box<dyn CpRegressor> {
+    let eng = engine.unwrap_or_else(crate::linalg::engine::native);
+    match kind {
+        RegressorKind::Knn => {
+            Box::new(KnnRegressorOptimized::with_engine(cfg.k, eng))
+        }
+        RegressorKind::KnnStandard => {
+            Box::new(KnnRegressorStandard::with_engine(cfg.k, eng))
+        }
+        RegressorKind::Ridge => Box::new(RidgeCp::new(cfg.rho)),
+    }
+}
+
 /// Engine selection honouring `use_pjrt` (falls back to native with a
 /// warning when artifacts are missing).
 pub fn select_engine(use_pjrt: bool, artifacts_dir: &str) -> Engine {
@@ -126,6 +148,32 @@ mod tests {
             m.fit(&ds);
             let s = m.scores(ds.row(0), 1);
             assert_eq!(s.train.len(), 10, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn regressor_factory_builds_every_kind() {
+        use crate::data::{make_regression, RegressionSpec};
+        let cfg = MeasureConfig {
+            k: 3,
+            ..Default::default()
+        };
+        let ds = make_regression(
+            &RegressionSpec {
+                n_samples: 20,
+                n_features: 4,
+                n_informative: 3,
+                noise: 2.0,
+            },
+            3,
+        );
+        for kind in RegressorKind::all() {
+            let mut r = build_regressor(kind, &cfg, None);
+            r.fit(&ds);
+            assert_eq!(r.n(), 20, "{}", r.name());
+            let (coefs, _, b) = r.coefficients(ds.row(0));
+            assert_eq!(coefs.len(), 20, "{}", r.name());
+            assert!(b.is_finite());
         }
     }
 

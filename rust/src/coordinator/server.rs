@@ -6,32 +6,59 @@
 //! ```text
 //! -> {"op":"predict","deployment":"knn","x":[...],"epsilon":0.1,"id":1}
 //! <- {"id":1,"p_values":[0.8,0.05],"set":[0],"forced":0}
+//! -> {"op":"predict_region","deployment":"reg","x":[...],"epsilon":0.1,"y":3.2}
+//! <- {"intervals":[[1.0,5.2]],"width":4.2,"hull":[1.0,5.2],"p_value":0.4}
 //! -> {"op":"learn","deployment":"knn","x":[...],"y":1}
 //! <- {"ok":true,"n_train":101,"version":1}
 //! -> {"op":"unlearn","deployment":"knn","index":17}
+//! -> {"op":"observe","tester":"drift","xs":[[...],[...]],"k":7,"seed":1}
+//! <- {"ok":true,"p_values":[null,0.5],"log_martingale":-0.1,"n":2,"alarm":false}
 //! -> {"op":"stats"} | {"op":"list"} | {"op":"ping"} | {"op":"shutdown"}
 //! ```
+//!
+//! `predict` serves classification deployments, `predict_region` serves
+//! regression deployments (both batched through the same dynamic
+//! batcher); `learn` routes y by the deployment's kind (integer label
+//! vs float target). `observe` feeds an online exchangeability tester
+//! (auto-created per `tester` name on first use) via
+//! [`ExchangeabilityTest::observe_batch`]. Unbounded interval endpoints
+//! (±inf) serialize as JSON `null` — the in-tree encoder's
+//! representation for non-finite numbers.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, RwLock};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::ServeConfig;
 use crate::coordinator::batcher::{Batcher, PushError};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::state::Registry;
+use crate::coordinator::state::{RegionAnswer, Registry};
 use crate::cp::classifier::{forced_from_p_values, set_from_p_values};
+use crate::cp::measure::CpMeasure;
+use crate::measures::KnnOptimized;
+use crate::online::ExchangeabilityTest;
 use crate::util::json::Json;
+
+/// What a queued job asks for.
+enum JobPayload {
+    /// classification: per-label p-values -> set/forced answer
+    PValues,
+    /// regression: exact interval region, optionally also the p-value
+    /// of a candidate label
+    Region { y: Option<f64> },
+}
 
 /// One queued prediction job.
 struct Job {
     deployment: String,
     x: Vec<f64>,
     eps: f64,
+    payload: JobPayload,
     enqueued: Instant,
     resp: mpsc::Sender<Json>,
 }
@@ -44,6 +71,10 @@ pub struct Server {
     cfg: ServeConfig,
     workers: Vec<std::thread::JoinHandle<()>>,
     stop: Arc<AtomicBool>,
+    /// online exchangeability testers, auto-created per name by the
+    /// `observe` op (write path — not routed through the batcher; the
+    /// caller already batches via the `xs` payload)
+    testers: RwLock<HashMap<String, ExchangeabilityTest<Box<dyn CpMeasure>>>>,
 }
 
 impl Server {
@@ -76,24 +107,32 @@ impl Server {
             cfg,
             workers,
             stop,
+            testers: RwLock::new(HashMap::new()),
         }
     }
 
-    /// Score one drained batch. Jobs are grouped by deployment
-    /// (preserving arrival order within each group) and scored with one
-    /// `Deployment::p_values_batch` call per `LOCK_CHUNK`-job sub-chunk,
-    /// so each test object's distance/kernel row is computed once
-    /// rather than once per candidate label — the batch axis the
-    /// dynamic batcher exists to exploit. Workers each drain their own
-    /// batch, so the existing pool still fans chunks out across cores.
+    /// Score one drained batch. Jobs are grouped by (deployment, payload
+    /// kind) — preserving arrival order within each group — and scored
+    /// with one batched registry call per `LOCK_CHUNK`-job sub-chunk:
+    /// `Deployment::p_values_batch` for classification jobs (each test
+    /// object's distance/kernel row computed once rather than once per
+    /// candidate label), `Deployment::region_rows` for regression jobs
+    /// (one `coefficients_batch` per chunk; eps and candidate label may
+    /// differ per job because only the sweep depends on them). Workers
+    /// each drain their own batch, so the existing pool still fans
+    /// chunks out across cores.
     fn run_batch(reg: &Registry, met: &Metrics, batch: Vec<Job>) {
-        let mut groups: Vec<(String, Vec<Job>)> = Vec::new();
+        let mut groups: Vec<(String, bool, Vec<Job>)> = Vec::new();
         for job in batch {
-            match groups.iter_mut().find(|(d, _)| *d == job.deployment) {
-                Some((_, jobs)) => jobs.push(job),
+            let is_region = matches!(job.payload, JobPayload::Region { .. });
+            match groups
+                .iter_mut()
+                .find(|(d, r, _)| *d == job.deployment && *r == is_region)
+            {
+                Some((_, _, jobs)) => jobs.push(job),
                 None => {
                     let dep = job.deployment.clone();
-                    groups.push((dep, vec![job]));
+                    groups.push((dep, is_region, vec![job]));
                 }
             }
         }
@@ -104,15 +143,44 @@ impl Server {
         // acquisitions. Within a chunk each object's row reuse across
         // labels (the main batch win) is fully preserved.
         const LOCK_CHUNK: usize = 16;
-        for (dep, jobs) in groups {
+        for (dep, is_region, jobs) in groups {
             for chunk in jobs.chunks(LOCK_CHUNK) {
                 let xs: Vec<&[f64]> =
                     chunk.iter().map(|j| j.x.as_slice()).collect();
-                match reg.with(&dep, |d| d.p_values_batch(&xs)) {
-                    Ok(ps_rows) => {
-                        debug_assert_eq!(ps_rows.len(), chunk.len());
-                        for (job, ps) in chunk.iter().zip(ps_rows) {
-                            let out = predict_json(&ps, job.eps);
+                let outs: Result<Vec<Json>> = if is_region {
+                    let eps: Vec<f64> = chunk.iter().map(|j| j.eps).collect();
+                    let ys: Vec<Option<f64>> = chunk
+                        .iter()
+                        .map(|j| match j.payload {
+                            JobPayload::Region { y } => y,
+                            JobPayload::PValues => None,
+                        })
+                        .collect();
+                    reg.with(&dep, |d| d.region_rows(&xs, &eps, &ys))
+                        .and_then(|r| r)
+                        .map(|rows| rows.iter().map(region_json).collect())
+                } else {
+                    reg.with(&dep, |d| -> Result<Vec<Vec<f64>>> {
+                        if d.is_regression() {
+                            bail!(
+                                "deployment {dep:?} is a regression \
+                                 deployment (use op \"predict_region\")"
+                            );
+                        }
+                        Ok(d.p_values_batch(&xs))
+                    })
+                    .and_then(|r| r)
+                    .map(|rows| {
+                        rows.iter()
+                            .zip(chunk)
+                            .map(|(ps, job)| predict_json(ps, job.eps))
+                            .collect()
+                    })
+                };
+                match outs {
+                    Ok(outs) => {
+                        debug_assert_eq!(outs.len(), chunk.len());
+                        for (job, out) in chunk.iter().zip(outs) {
                             met.observe_latency_us(
                                 job.enqueued.elapsed().as_micros() as u64,
                             );
@@ -145,6 +213,8 @@ impl Server {
         let id = req.get("id").cloned().unwrap_or(Json::Null);
         let mut out = match req.get("op").and_then(Json::as_str) {
             Some("predict") => self.handle_predict(req),
+            Some("predict_region") => self.handle_predict_region(req),
+            Some("observe") => self.handle_observe(req),
             Some("learn") => self.handle_learn(req),
             Some("unlearn") => self.handle_unlearn(req),
             Some("stats") => self.metrics.snapshot(),
@@ -171,22 +241,20 @@ impl Server {
         out
     }
 
-    fn handle_predict(&self, req: &Json) -> Json {
-        let Some(dep) = req.get("deployment").and_then(Json::as_str) else {
-            return err_json("missing deployment");
-        };
-        let Some(x) = req.get("x").and_then(Json::as_f64_vec) else {
-            return err_json("missing x");
-        };
-        let eps = req
-            .get("epsilon")
-            .and_then(Json::as_f64)
-            .unwrap_or(self.cfg.default_epsilon);
+    /// Push one job through the batcher and wait for its answer.
+    fn enqueue(
+        &self,
+        dep: &str,
+        x: Vec<f64>,
+        eps: f64,
+        payload: JobPayload,
+    ) -> Json {
         let (tx, rx) = mpsc::channel();
         let job = Job {
             deployment: dep.to_string(),
             x,
             eps,
+            payload,
             enqueued: Instant::now(),
             resp: tx,
         };
@@ -206,17 +274,134 @@ impl Server {
         }
     }
 
+    fn handle_predict(&self, req: &Json) -> Json {
+        let Some(dep) = req.get("deployment").and_then(Json::as_str) else {
+            return err_json("missing deployment");
+        };
+        let Some(x) = req.get("x").and_then(Json::as_f64_vec) else {
+            return err_json("missing x");
+        };
+        let eps = req
+            .get("epsilon")
+            .and_then(Json::as_f64)
+            .unwrap_or(self.cfg.default_epsilon);
+        self.enqueue(dep, x, eps, JobPayload::PValues)
+    }
+
+    /// Regression prediction: exact interval region (optionally with the
+    /// p-value of a candidate `y`), batched like `predict`.
+    fn handle_predict_region(&self, req: &Json) -> Json {
+        let Some(dep) = req.get("deployment").and_then(Json::as_str) else {
+            return err_json("missing deployment");
+        };
+        let Some(x) = req.get("x").and_then(Json::as_f64_vec) else {
+            return err_json("missing x");
+        };
+        let eps = req
+            .get("epsilon")
+            .and_then(Json::as_f64)
+            .unwrap_or(self.cfg.default_epsilon);
+        let y = req.get("y").and_then(Json::as_f64);
+        self.enqueue(dep, x, eps, JobPayload::Region { y })
+    }
+
+    /// Feed observations to a named exchangeability tester (created on
+    /// first use with `k`/`seed` from the request; the first batch fixes
+    /// the observation dimension). Accepts a single `"x"` row or a
+    /// batched `"xs"` payload, scored through
+    /// [`ExchangeabilityTest::observe_batch`].
+    fn handle_observe(&self, req: &Json) -> Json {
+        let name = req
+            .get("tester")
+            .and_then(Json::as_str)
+            .unwrap_or("default");
+        let rows: Vec<Vec<f64>> =
+            if let Some(arr) = req.get("xs").and_then(Json::as_arr) {
+                let mut rows = Vec::with_capacity(arr.len());
+                for v in arr {
+                    match v.as_f64_vec() {
+                        Some(r) => rows.push(r),
+                        None => {
+                            return err_json(
+                                "xs must be an array of float arrays",
+                            )
+                        }
+                    }
+                }
+                rows
+            } else if let Some(x) = req.get("x").and_then(Json::as_f64_vec) {
+                vec![x]
+            } else {
+                return err_json("observe needs x or xs");
+            };
+        if rows.is_empty() {
+            return err_json("observe needs at least one observation");
+        }
+        let dim = rows[0].len();
+        if dim == 0 || rows.iter().any(|r| r.len() != dim) {
+            return err_json("observations must share a nonzero dimension");
+        }
+        let k = req.get("k").and_then(Json::as_usize).unwrap_or(7).max(1);
+        let seed = req.get("seed").and_then(Json::as_usize).unwrap_or(1);
+        let mut guard = self.testers.write().unwrap();
+        let tester = guard.entry(name.to_string()).or_insert_with(|| {
+            let measure: Box<dyn CpMeasure> =
+                Box::new(KnnOptimized::new(k, true));
+            ExchangeabilityTest::new(measure, dim, seed as u64)
+        });
+        if tester.dim() != dim {
+            return err_json(&format!(
+                "tester {name:?} expects dimension {}, got {dim}",
+                tester.dim()
+            ));
+        }
+        let xs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let ps = tester.observe_batch(&xs);
+        let lm = tester.log_martingale();
+        let n = tester.seen();
+        drop(guard);
+        self.metrics
+            .online_updates
+            .fetch_add(rows.len() as u64, Ordering::Relaxed);
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "p_values",
+                Json::Arr(
+                    ps.into_iter()
+                        .map(|p| p.map_or(Json::Null, Json::Num))
+                        .collect(),
+                ),
+            ),
+            ("log_martingale", Json::Num(lm)),
+            ("n", Json::Num(n as f64)),
+            ("alarm", Json::Bool(lm > 100f64.ln())),
+        ])
+    }
+
     fn handle_learn(&self, req: &Json) -> Json {
         let (Some(dep), Some(x), Some(y)) = (
             req.get("deployment").and_then(Json::as_str),
             req.get("x").and_then(Json::as_f64_vec),
-            req.get("y").and_then(Json::as_usize),
+            req.get("y").and_then(Json::as_f64),
         ) else {
             return err_json("learn needs deployment, x, y");
         };
-        match self.registry.with_mut(dep, |d| d.learn(&x, y).map(|_| {
-            (d.n_train(), d.version)
-        })) {
+        // y routes on the deployment kind: float target for regression,
+        // non-negative integer label for classification
+        let res = self.registry.with_mut(dep, |d| {
+            if d.is_regression() {
+                d.learn_reg(&x, y).map(|_| (d.n_train(), d.version))
+            } else if y < 0.0 || y.fract() != 0.0 {
+                bail!(
+                    "classification deployment needs a non-negative \
+                     integer y, got {y}"
+                )
+            } else {
+                d.learn(&x, y as usize).map(|_| (d.n_train(), d.version))
+            }
+        });
+        match res {
             Ok(Ok((n, v))) => {
                 self.metrics.online_updates.fetch_add(1, Ordering::Relaxed);
                 Json::obj(vec![
@@ -278,6 +463,33 @@ fn predict_json(ps: &[f64], eps: f64) -> Json {
         ("set", Json::Arr(set)),
         ("forced", Json::Num(forced as f64)),
     ])
+}
+
+/// Build the predict_region response from one batched answer:
+/// `intervals` as `[lo, hi]` pairs, total `width`, the convex `hull`
+/// (null for an empty region), and the candidate label's `p_value` when
+/// the request supplied a `y`. Non-finite numbers (unbounded endpoints,
+/// infinite width) serialize as JSON null.
+fn region_json(ans: &RegionAnswer) -> Json {
+    let intervals: Vec<Json> = ans
+        .region
+        .intervals
+        .iter()
+        .map(|iv| Json::Arr(vec![Json::Num(iv.lo), Json::Num(iv.hi)]))
+        .collect();
+    let hull = match ans.region.hull() {
+        Some(h) => Json::Arr(vec![Json::Num(h.lo), Json::Num(h.hi)]),
+        None => Json::Null,
+    };
+    let mut fields = vec![
+        ("intervals", Json::Arr(intervals)),
+        ("width", Json::Num(ans.region.total_width())),
+        ("hull", hull),
+    ];
+    if let Some(p) = ans.p_at_y {
+        fields.push(("p_value", Json::Num(p)));
+    }
+    Json::obj(fields)
 }
 
 fn err_json(msg: &str) -> Json {
@@ -368,6 +580,126 @@ mod tests {
             },
             reg,
         ))
+    }
+
+    fn test_server_with_regression() -> Arc<Server> {
+        use crate::config::RegressorKind;
+        use crate::data::{make_regression, RegressionSpec};
+        let srv = test_server();
+        let rds = make_regression(
+            &RegressionSpec {
+                n_samples: 30,
+                n_features: 4,
+                n_informative: 3,
+                noise: 3.0,
+            },
+            2,
+        );
+        srv.registry.insert(Deployment::train_regression(
+            "reg",
+            RegressorKind::Knn,
+            &MeasureConfig {
+                k: 3,
+                ..Default::default()
+            },
+            &rds,
+            None,
+        ));
+        srv
+    }
+
+    #[test]
+    fn predict_region_roundtrip_inprocess() {
+        let srv = test_server_with_regression();
+        let req = Json::parse(
+            r#"{"op":"predict_region","deployment":"reg","x":[0,0,0,0],"epsilon":0.1,"y":0.0,"id":3}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("id").unwrap().as_f64(), Some(3.0));
+        let intervals = resp.get("intervals").unwrap().as_arr().unwrap();
+        assert!(!intervals.is_empty());
+        assert!(resp.get("hull").is_some());
+        let p = resp.get("p_value").unwrap().as_f64().unwrap();
+        assert!(p > 0.0 && p <= 1.0);
+        // without y there is no p_value field
+        let req = Json::parse(
+            r#"{"op":"predict_region","deployment":"reg","x":[0,0,0,0]}"#,
+        )
+        .unwrap();
+        assert!(srv.handle(&req).get("p_value").is_none());
+    }
+
+    #[test]
+    fn wrong_op_for_deployment_kind_is_clean_error() {
+        let srv = test_server_with_regression();
+        // predict on a regression deployment
+        let req = Json::parse(
+            r#"{"op":"predict","deployment":"reg","x":[0,0,0,0]}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        // predict_region on a classification deployment
+        let req = Json::parse(
+            r#"{"op":"predict_region","deployment":"knn","x":[0,0,0]}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn learn_routes_float_labels_to_regression() {
+        let srv = test_server_with_regression();
+        let req = Json::parse(
+            r#"{"op":"learn","deployment":"reg","x":[0.5,0.5,0.5,0.5],"y":1.25}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.get("n_train").unwrap().as_f64(), Some(31.0));
+        // float label on a classification deployment is rejected
+        let req = Json::parse(
+            r#"{"op":"learn","deployment":"knn","x":[0,0,0],"y":0.5}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn observe_batch_roundtrip_inprocess() {
+        let srv = test_server();
+        let req = Json::parse(
+            r#"{"op":"observe","tester":"t","xs":[[0,0,0],[0.5,0.1,0.2],[0.1,0.4,0.3]],"k":3,"seed":1}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        let ps = resp.get("p_values").unwrap().as_arr().unwrap();
+        assert_eq!(ps.len(), 3);
+        assert!(matches!(ps[0], Json::Null), "bootstrap p is null");
+        assert!(ps[1].as_f64().is_some());
+        assert_eq!(resp.get("n").unwrap().as_f64(), Some(3.0));
+        assert!(resp.get("log_martingale").unwrap().as_f64().is_some());
+        // the tester persists across requests
+        let req = Json::parse(
+            r#"{"op":"observe","tester":"t","x":[0.2,0.2,0.2]}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("n").unwrap().as_f64(), Some(4.0));
+        assert!(resp.get("p_values").unwrap().as_arr().unwrap()[0]
+            .as_f64()
+            .is_some());
+        // dimension mismatch is a clean error
+        let req = Json::parse(
+            r#"{"op":"observe","tester":"t","x":[0.2,0.2]}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
     }
 
     #[test]

@@ -6,19 +6,55 @@ use std::sync::RwLock;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{MeasureConfig, MeasureKind};
-use crate::coordinator::factory::build_measure;
+use crate::config::{MeasureConfig, MeasureKind, RegressorKind};
+use crate::coordinator::factory::{build_measure, build_regressor};
 use crate::cp::measure::CpMeasure;
 use crate::cp::pvalue::p_value;
-use crate::data::{Dataset, Label};
+use crate::data::{Dataset, Label, RegressionDataset};
 use crate::linalg::engine::Engine;
+use crate::regression::{conformal_region, p_value_at, CpRegressor, Region};
+
+/// What a deployment serves: label p-values or regression intervals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeploymentKind {
+    Classifier(MeasureKind),
+    Regressor(RegressorKind),
+}
+
+impl DeploymentKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeploymentKind::Classifier(k) => k.as_str(),
+            DeploymentKind::Regressor(k) => k.as_str(),
+        }
+    }
+}
+
+/// The trained model behind a deployment.
+enum Model {
+    Classifier {
+        measure: Box<dyn CpMeasure>,
+        n_labels: usize,
+    },
+    Regressor {
+        regressor: Box<dyn CpRegressor>,
+    },
+}
+
+/// One batched regression answer: the exact prediction region plus,
+/// when the request supplied a candidate `y`, its conformal p-value
+/// (computed from the same coefficient sweep, so it is consistent with
+/// the region by construction).
+pub struct RegionAnswer {
+    pub region: Region,
+    pub p_at_y: Option<f64>,
+}
 
 /// One deployed conformal predictor.
 pub struct Deployment {
     pub name: String,
-    pub kind: MeasureKind,
-    measure: Box<dyn CpMeasure>,
-    n_labels: usize,
+    pub kind: DeploymentKind,
+    model: Model,
     /// monotone version, bumped by online updates
     pub version: u64,
 }
@@ -35,17 +71,53 @@ impl Deployment {
         measure.fit(ds);
         Deployment {
             name: name.to_string(),
-            kind,
-            measure,
-            n_labels: ds.n_labels,
+            kind: DeploymentKind::Classifier(kind),
+            model: Model::Classifier {
+                measure,
+                n_labels: ds.n_labels,
+            },
             version: 0,
         }
     }
 
+    /// Train a regression deployment (served via `op: "predict_region"`).
+    pub fn train_regression(
+        name: &str,
+        kind: RegressorKind,
+        cfg: &MeasureConfig,
+        ds: &RegressionDataset,
+        engine: Option<Engine>,
+    ) -> Self {
+        let mut regressor = build_regressor(kind, cfg, engine);
+        regressor.fit(ds);
+        Deployment {
+            name: name.to_string(),
+            kind: DeploymentKind::Regressor(kind),
+            model: Model::Regressor { regressor },
+            version: 0,
+        }
+    }
+
+    pub fn is_regression(&self) -> bool {
+        matches!(self.model, Model::Regressor { .. })
+    }
+
+    fn classifier(&self) -> (&dyn CpMeasure, usize) {
+        match &self.model {
+            Model::Classifier { measure, n_labels } => {
+                (measure.as_ref(), *n_labels)
+            }
+            Model::Regressor { .. } => panic!(
+                "deployment {:?} is a regression deployment; \
+                 callers must route via region_rows",
+                self.name
+            ),
+        }
+    }
+
     pub fn p_values(&self, x: &[f64]) -> Vec<f64> {
-        (0..self.n_labels)
-            .map(|y| p_value(&self.measure.scores(x, y)))
-            .collect()
+        let (measure, n_labels) = self.classifier();
+        (0..n_labels).map(|y| p_value(&measure.scores(x, y))).collect()
     }
 
     /// Per-label p-values for a whole batch of test objects through ONE
@@ -56,43 +128,122 @@ impl Deployment {
     /// [`Deployment::p_values`] bit for bit (the measure's batch
     /// contract).
     pub fn p_values_batch(&self, xs: &[&[f64]]) -> Vec<Vec<f64>> {
-        crate::cp::pvalue::p_value_rows(
-            self.measure.as_ref(),
-            xs,
-            self.n_labels,
-        )
+        let (measure, n_labels) = self.classifier();
+        crate::cp::pvalue::p_value_rows(measure, xs, n_labels)
     }
 
     pub fn predict_set(&self, x: &[f64], eps: f64) -> Vec<Label> {
         crate::cp::classifier::set_from_p_values(&self.p_values(x), eps)
     }
 
+    /// Batched regression answers — the regression serving hot path,
+    /// mirroring [`Deployment::p_values_batch`]: ONE
+    /// [`CpRegressor::coefficients_batch`] call per chunk, then a
+    /// per-object sweep. `eps` and the optional candidate label may
+    /// differ per object because only the sweep depends on them, never
+    /// the coefficients. Errors if this is a classification deployment.
+    pub fn region_rows(
+        &self,
+        xs: &[&[f64]],
+        eps: &[f64],
+        ys: &[Option<f64>],
+    ) -> Result<Vec<RegionAnswer>> {
+        let Model::Regressor { regressor } = &self.model else {
+            bail!(
+                "deployment {:?} is a classification deployment \
+                 (use op \"predict\")",
+                self.name
+            );
+        };
+        assert_eq!(xs.len(), eps.len());
+        assert_eq!(xs.len(), ys.len());
+        Ok(regressor
+            .coefficients_batch(xs)
+            .into_iter()
+            .zip(eps.iter().zip(ys))
+            .map(|((coefs, a, b), (&e, &y))| RegionAnswer {
+                region: conformal_region(&coefs, a, b, e),
+                p_at_y: y.map(|y| p_value_at(&coefs, a, b, y)),
+            })
+            .collect())
+    }
+
+    /// Single-object regression answer; equals `region_rows` on a
+    /// singleton batch (same coefficients, same sweep).
+    pub fn predict_region(
+        &self,
+        x: &[f64],
+        eps: f64,
+        y: Option<f64>,
+    ) -> Result<RegionAnswer> {
+        Ok(self
+            .region_rows(&[x], &[eps], &[y])?
+            .pop()
+            .expect("one answer for one object"))
+    }
+
     /// Online increment; Err if the measure cannot update in place.
     pub fn learn(&mut self, x: &[f64], y: Label) -> Result<()> {
-        if self.measure.learn(x, y) {
+        let Model::Classifier { measure, .. } = &mut self.model else {
+            bail!(
+                "deployment {:?} is a regression deployment; \
+                 y must be a float label",
+                self.name
+            );
+        };
+        if measure.learn(x, y) {
             self.version += 1;
             Ok(())
         } else {
-            bail!("measure {} does not support online learn", self.measure.name())
+            bail!("measure {} does not support online learn", measure.name())
+        }
+    }
+
+    /// Online increment for regression deployments (float label).
+    pub fn learn_reg(&mut self, x: &[f64], y: f64) -> Result<()> {
+        let Model::Regressor { regressor } = &mut self.model else {
+            bail!(
+                "deployment {:?} is a classification deployment; \
+                 y must be an integer label",
+                self.name
+            );
+        };
+        if regressor.learn(x, y) {
+            self.version += 1;
+            Ok(())
+        } else {
+            bail!(
+                "regressor {} does not support online learn",
+                regressor.name()
+            )
         }
     }
 
     /// Online decrement by training index.
     pub fn unlearn(&mut self, idx: usize) -> Result<()> {
-        if self.measure.unlearn(idx) {
+        let Model::Classifier { measure, .. } = &mut self.model else {
+            bail!("regression deployments do not support unlearn yet");
+        };
+        if measure.unlearn(idx) {
             self.version += 1;
             Ok(())
         } else {
-            bail!("measure {} does not support online unlearn", self.measure.name())
+            bail!("measure {} does not support online unlearn", measure.name())
         }
     }
 
     pub fn n_train(&self) -> usize {
-        self.measure.n()
+        match &self.model {
+            Model::Classifier { measure, .. } => measure.n(),
+            Model::Regressor { regressor } => regressor.n(),
+        }
     }
 
     pub fn measure_name(&self) -> String {
-        self.measure.name()
+        match &self.model {
+            Model::Classifier { measure, .. } => measure.name(),
+            Model::Regressor { regressor } => regressor.name(),
+        }
     }
 }
 
@@ -204,6 +355,66 @@ mod tests {
             assert_eq!(row, &dep.p_values(x));
         }
         assert!(dep.p_values_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn regression_deployment_round_trip() {
+        use crate::data::{make_regression, RegressionSpec};
+        let rds = make_regression(
+            &RegressionSpec {
+                n_samples: 30,
+                n_features: 4,
+                n_informative: 3,
+                noise: 3.0,
+            },
+            5,
+        );
+        let cfg = MeasureConfig {
+            k: 3,
+            ..Default::default()
+        };
+        let mut dep = Deployment::train_regression(
+            "reg",
+            RegressorKind::Knn,
+            &cfg,
+            &rds,
+            None,
+        );
+        assert!(dep.is_regression());
+        assert_eq!(dep.n_train(), 30);
+        // batched answers equal singles exactly, per-object eps honoured
+        let xs: Vec<&[f64]> = (0..3).map(|i| rds.row(i)).collect();
+        let eps = [0.1, 0.3, 0.1];
+        let ys = [Some(rds.y[0]), None, Some(-1e6)];
+        let rows = dep.region_rows(&xs, &eps, &ys).unwrap();
+        assert_eq!(rows.len(), 3);
+        for (i, row) in rows.iter().enumerate() {
+            let single = dep.predict_region(xs[i], eps[i], ys[i]).unwrap();
+            assert_eq!(row.region, single.region, "i={i}");
+            assert_eq!(row.p_at_y, single.p_at_y, "i={i}");
+        }
+        assert!(rows[0].p_at_y.unwrap() > 0.0);
+        assert!(rows[1].p_at_y.is_none());
+        // a label a million units away must be maximally nonconforming
+        assert!(rows[2].p_at_y.unwrap() <= 2.0 / 31.0 + 1e-12);
+        // wrong-op routing errors instead of panicking
+        assert!(dep.learn(&vec![0.0; 4], 1).is_err());
+        assert!(dep.unlearn(0).is_err());
+        // float-label learn works and bumps the version
+        dep.learn_reg(rds.row(0), rds.y[0]).unwrap();
+        assert_eq!(dep.n_train(), 31);
+        assert_eq!(dep.version, 1);
+        // classifiers reject float-label learn symmetrically
+        let cds = ds(20, 6);
+        let mut cdep = Deployment::train(
+            "cls",
+            MeasureKind::SimplifiedKnn,
+            &cfg,
+            &cds,
+            None,
+        );
+        assert!(cdep.learn_reg(cds.row(0), 0.5).is_err());
+        assert!(cdep.region_rows(&[cds.row(0)], &[0.1], &[None]).is_err());
     }
 
     #[test]

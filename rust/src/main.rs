@@ -18,12 +18,12 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use exact_cp::bench_harness::{self, ALL_EXPERIMENTS};
-use exact_cp::config::{Config, MeasureKind};
+use exact_cp::config::{Config, MeasureKind, RegressorKind};
 use exact_cp::coordinator::factory::{build_measure, build_standard_measure, select_engine};
 use exact_cp::coordinator::server::{serve, Server};
 use exact_cp::coordinator::state::{Deployment, Registry};
 use exact_cp::cp::pvalue::p_value;
-use exact_cp::data::{make_classification, ClassificationSpec};
+use exact_cp::data::{make_classification, make_regression, ClassificationSpec, RegressionSpec};
 use exact_cp::runtime::PjrtRuntime;
 
 /// Minimal flag parser: positional args + `--key value` + `--flag`.
@@ -131,7 +131,7 @@ USAGE:
                    [--n-test M] [--timeout S] [--paper-scale] [--config F]
       ids: fig2 fig3 fig4 fig5 fig6 table1 table2 table3 fuzziness iid
   repro serve   [--addr HOST:PORT] [--n N] [--measures knn,kde,...]
-                [--use-pjrt] [--config F]
+                [--regressors knn-reg,ridge,...] [--use-pjrt] [--config F]
   repro predict [--measure M] [--n N] [--eps E] [--use-pjrt]
   repro artifacts [--dir DIR]
   repro selfcheck
@@ -180,6 +180,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         1,
     );
     let registry = Arc::new(Registry::new());
+    let mut n_deployments = 0;
     for name in measures.split(',') {
         let kind: MeasureKind = name.trim().parse()?;
         println!("training deployment {name} on n={n}...");
@@ -190,6 +191,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
             &ds,
             Some(engine.clone()),
         ));
+        n_deployments += 1;
+    }
+    // regression deployments (served via op "predict_region")
+    if let Some(regressors) = args.get("regressors") {
+        let rds = make_regression(
+            &RegressionSpec {
+                n_samples: n,
+                n_features: 10,
+                n_informative: 5,
+                noise: 5.0,
+            },
+            1,
+        );
+        for name in regressors.split(',') {
+            let kind: RegressorKind = name.trim().parse()?;
+            println!("training regression deployment {name} on n={n}...");
+            registry.insert(Deployment::train_regression(
+                name.trim(),
+                kind,
+                &cfg.measure,
+                &rds,
+                Some(engine.clone()),
+            ));
+            n_deployments += 1;
+        }
     }
     let mut serve_cfg = cfg.serve.clone();
     serve_cfg.addr = addr.clone();
@@ -197,9 +223,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let listener = std::net::TcpListener::bind(&addr)
         .with_context(|| format!("binding {addr}"))?;
     println!(
-        "serving {} deployment(s) on {addr} (engine: {}) — JSON lines; \
-         send {{\"op\":\"shutdown\"}} to stop",
-        measures.split(',').count(),
+        "serving {n_deployments} deployment(s) on {addr} (engine: {}) — \
+         JSON lines; send {{\"op\":\"shutdown\"}} to stop",
         engine.name(),
     );
     serve(server, listener)

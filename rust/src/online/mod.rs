@@ -194,6 +194,16 @@ impl<M: CpMeasure> ExchangeabilityTest<M> {
     pub fn measure(&self) -> &M {
         &self.measure
     }
+
+    /// Observations processed so far (including the bootstrap one).
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    /// Expected observation dimension.
+    pub fn dim(&self) -> usize {
+        self.p
+    }
 }
 
 #[cfg(test)]

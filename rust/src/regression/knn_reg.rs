@@ -28,6 +28,7 @@
 use crate::data::RegressionDataset;
 use crate::linalg::engine::{native, Engine};
 use crate::regression::region::{conformal_region, p_value_at, Region};
+use crate::regression::{Coefficients, CpRegressor};
 
 /// Per-point neighbour statistics used by both variants.
 #[derive(Clone, Debug)]
@@ -115,11 +116,15 @@ pub struct KnnRegressorStandard {
 
 impl KnnRegressorStandard {
     pub fn new(k: usize) -> Self {
+        Self::with_engine(k, native())
+    }
+
+    pub fn with_engine(k: usize, engine: Engine) -> Self {
         assert!(k >= 1);
         KnnRegressorStandard {
             k,
             ds: None,
-            engine: native(),
+            engine,
         }
     }
 
@@ -127,16 +132,15 @@ impl KnnRegressorStandard {
         self.ds = Some(ds.clone());
     }
 
-    /// Affine coefficients for one test object — O(n^2) neighbour
-    /// recomputation (this is exactly the term our optimization removes).
-    pub fn coefficients(&self, x: &[f64]) -> (Vec<(f64, f64)>, f64, f64) {
-        let ds = self.ds.as_ref().expect("fit first");
+    pub fn n(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n())
+    }
+
+    /// Recompute every training point's neighbour statistics — the
+    /// O(n^2) term the optimized variant precomputes at fit time. It is
+    /// test-independent, so the batch path runs it once per batch.
+    fn all_stats(&self, ds: &RegressionDataset) -> Vec<NnStats> {
         let n = ds.n();
-        let mut d_test = vec![0.0; n];
-        self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d_test);
-        for v in d_test.iter_mut() {
-            *v = v.sqrt();
-        }
         let mut stats = Vec::with_capacity(n);
         let mut d_i = vec![0.0; n];
         for i in 0..n {
@@ -146,7 +150,42 @@ impl KnnRegressorStandard {
             }
             stats.push(nn_stats(&d_i, &ds.y, i, self.k));
         }
+        stats
+    }
+
+    /// Affine coefficients for one test object — O(n^2) neighbour
+    /// recomputation (this is exactly the term our optimization removes).
+    pub fn coefficients(&self, x: &[f64]) -> Coefficients {
+        let ds = self.ds.as_ref().expect("fit first");
+        let stats = self.all_stats(ds);
+        let mut d_test = vec![0.0; ds.n()];
+        self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d_test);
+        for v in d_test.iter_mut() {
+            *v = v.sqrt();
+        }
         coefficients(&stats, &d_test, ds, self.k)
+    }
+
+    /// Batched coefficients: the O(n^2) neighbour-statistics pass is
+    /// shared across the whole batch, so the per-object cost drops to
+    /// one distance row + assembly. Bit-identical to per-object
+    /// [`coefficients`](Self::coefficients) (same helpers, same order).
+    pub fn coefficients_batch(&self, xs: &[&[f64]]) -> Vec<Coefficients> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let ds = self.ds.as_ref().expect("fit first");
+        let stats = self.all_stats(ds);
+        let mut d_test = vec![0.0; ds.n()];
+        xs.iter()
+            .map(|&x| {
+                self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d_test);
+                for v in d_test.iter_mut() {
+                    *v = v.sqrt();
+                }
+                coefficients(&stats, &d_test, ds, self.k)
+            })
+            .collect()
     }
 
     pub fn predict_region(&self, x: &[f64], eps: f64) -> Region {
@@ -154,9 +193,64 @@ impl KnnRegressorStandard {
         conformal_region(&coefs, a, b, eps)
     }
 
+    /// Batched regions at a shared eps; exactly equals mapping
+    /// [`predict_region`](Self::predict_region) over `xs`.
+    pub fn predict_region_batch(&self, xs: &[&[f64]], eps: f64) -> Vec<Region> {
+        self.coefficients_batch(xs)
+            .into_iter()
+            .map(|(coefs, a, b)| conformal_region(&coefs, a, b, eps))
+            .collect()
+    }
+
     pub fn p_value(&self, x: &[f64], y: f64) -> f64 {
         let (coefs, a, b) = self.coefficients(x);
         p_value_at(&coefs, a, b, y)
+    }
+
+    /// Batched p-values over paired `(xs[i], ys[i])`; bit-identical to
+    /// per-pair [`p_value`](Self::p_value).
+    pub fn p_values_batch(&self, xs: &[&[f64]], ys: &[f64]) -> Vec<f64> {
+        assert_eq!(xs.len(), ys.len());
+        self.coefficients_batch(xs)
+            .into_iter()
+            .zip(ys)
+            .map(|((coefs, a, b), &y)| p_value_at(&coefs, a, b, y))
+            .collect()
+    }
+}
+
+impl CpRegressor for KnnRegressorStandard {
+    fn name(&self) -> String {
+        format!("knn-reg-standard(k={})", self.k)
+    }
+
+    fn fit(&mut self, ds: &RegressionDataset) {
+        KnnRegressorStandard::fit(self, ds)
+    }
+
+    fn coefficients(&self, x: &[f64]) -> Coefficients {
+        KnnRegressorStandard::coefficients(self, x)
+    }
+
+    fn coefficients_batch(&self, xs: &[&[f64]]) -> Vec<Coefficients> {
+        KnnRegressorStandard::coefficients_batch(self, xs)
+    }
+
+    fn n(&self) -> usize {
+        KnnRegressorStandard::n(self)
+    }
+
+    /// The standard variant recomputes all statistics at prediction
+    /// time, so online learning is just appending the example.
+    fn learn(&mut self, x: &[f64], y: f64) -> bool {
+        match self.ds.as_mut() {
+            Some(ds) => {
+                ds.x.extend_from_slice(x);
+                ds.y.push(y);
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -198,8 +292,12 @@ impl KnnRegressorOptimized {
         }
     }
 
+    pub fn n(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n())
+    }
+
     /// Prediction phase: O(n) distance row + O(n log n) sweep.
-    pub fn coefficients(&self, x: &[f64]) -> (Vec<(f64, f64)>, f64, f64) {
+    pub fn coefficients(&self, x: &[f64]) -> Coefficients {
         let ds = self.ds.as_ref().expect("fit first");
         let mut d_test = vec![0.0; ds.n()];
         self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d_test);
@@ -209,14 +307,55 @@ impl KnnRegressorOptimized {
         coefficients(&self.stats, &d_test, ds, self.k)
     }
 
+    /// Batched coefficients: statistics are already precomputed, so the
+    /// batch path just reuses one distance-row buffer across objects.
+    /// Bit-identical to per-object
+    /// [`coefficients`](Self::coefficients).
+    pub fn coefficients_batch(&self, xs: &[&[f64]]) -> Vec<Coefficients> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let ds = self.ds.as_ref().expect("fit first");
+        let mut d_test = vec![0.0; ds.n()];
+        xs.iter()
+            .map(|&x| {
+                self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d_test);
+                for v in d_test.iter_mut() {
+                    *v = v.sqrt();
+                }
+                coefficients(&self.stats, &d_test, ds, self.k)
+            })
+            .collect()
+    }
+
     pub fn predict_region(&self, x: &[f64], eps: f64) -> Region {
         let (coefs, a, b) = self.coefficients(x);
         conformal_region(&coefs, a, b, eps)
     }
 
+    /// Batched regions at a shared eps; exactly equals mapping
+    /// [`predict_region`](Self::predict_region) over `xs`.
+    pub fn predict_region_batch(&self, xs: &[&[f64]], eps: f64) -> Vec<Region> {
+        self.coefficients_batch(xs)
+            .into_iter()
+            .map(|(coefs, a, b)| conformal_region(&coefs, a, b, eps))
+            .collect()
+    }
+
     pub fn p_value(&self, x: &[f64], y: f64) -> f64 {
         let (coefs, a, b) = self.coefficients(x);
         p_value_at(&coefs, a, b, y)
+    }
+
+    /// Batched p-values over paired `(xs[i], ys[i])`; bit-identical to
+    /// per-pair [`p_value`](Self::p_value).
+    pub fn p_values_batch(&self, xs: &[&[f64]], ys: &[f64]) -> Vec<f64> {
+        assert_eq!(xs.len(), ys.len());
+        self.coefficients_batch(xs)
+            .into_iter()
+            .zip(ys)
+            .map(|((coefs, a, b), &y)| p_value_at(&coefs, a, b, y))
+            .collect()
     }
 
     /// Online increment (§9): add (x, y) in O(n) + O(k) per affected row.
@@ -250,6 +389,36 @@ impl KnnRegressorOptimized {
             *v = v.sqrt();
         }
         self.stats.push(nn_stats(&d_new, &ds.y, n, self.k));
+    }
+}
+
+impl CpRegressor for KnnRegressorOptimized {
+    fn name(&self) -> String {
+        format!("knn-reg(k={})", self.k)
+    }
+
+    fn fit(&mut self, ds: &RegressionDataset) {
+        KnnRegressorOptimized::fit(self, ds)
+    }
+
+    fn coefficients(&self, x: &[f64]) -> Coefficients {
+        KnnRegressorOptimized::coefficients(self, x)
+    }
+
+    fn coefficients_batch(&self, xs: &[&[f64]]) -> Vec<Coefficients> {
+        KnnRegressorOptimized::coefficients_batch(self, xs)
+    }
+
+    fn n(&self) -> usize {
+        KnnRegressorOptimized::n(self)
+    }
+
+    fn learn(&mut self, x: &[f64], y: f64) -> bool {
+        if self.ds.is_none() {
+            return false;
+        }
+        KnnRegressorOptimized::learn(self, x, y);
+        true
     }
 }
 
@@ -408,6 +577,83 @@ mod tests {
         let mut refit = KnnRegressorOptimized::new(3);
         refit.fit(&grown);
         let probe = ds(4, 10);
+        for i in 0..probe.n() {
+            assert_eq!(
+                inc.coefficients(probe.row(i)),
+                refit.coefficients(probe.row(i))
+            );
+        }
+    }
+
+    fn coefs_identical(a: &Coefficients, b: &Coefficients) -> bool {
+        a.1.to_bits() == b.1.to_bits()
+            && a.2.to_bits() == b.2.to_bits()
+            && a.0.len() == b.0.len()
+            && a.0.iter().zip(&b.0).all(|(u, v)| {
+                u.0.to_bits() == v.0.to_bits() && u.1.to_bits() == v.1.to_bits()
+            })
+    }
+
+    #[test]
+    fn batch_coefficients_bitwise_identical_both_variants() {
+        let d = ds(45, 20);
+        let mut s = KnnRegressorStandard::new(4);
+        let mut o = KnnRegressorOptimized::new(4);
+        s.fit(&d);
+        o.fit(&d);
+        let probe = ds(6, 21);
+        // include a probe that duplicates a training row (zero-distance
+        // ties exercise the strict `<` neighbour-entry rule)
+        let mut xs: Vec<&[f64]> = (0..probe.n()).map(|i| probe.row(i)).collect();
+        xs.push(d.row(0));
+        let bs = s.coefficients_batch(&xs);
+        let bo = o.coefficients_batch(&xs);
+        assert_eq!(bs.len(), xs.len());
+        for (i, &x) in xs.iter().enumerate() {
+            assert!(coefs_identical(&bs[i], &s.coefficients(x)), "std i={i}");
+            assert!(coefs_identical(&bo[i], &o.coefficients(x)), "opt i={i}");
+        }
+    }
+
+    #[test]
+    fn batch_empty_and_singleton() {
+        let d = ds(20, 22);
+        let mut s = KnnRegressorStandard::new(3);
+        let mut o = KnnRegressorOptimized::new(3);
+        s.fit(&d);
+        o.fit(&d);
+        assert!(s.coefficients_batch(&[]).is_empty());
+        assert!(o.coefficients_batch(&[]).is_empty());
+        assert!(s.predict_region_batch(&[], 0.1).is_empty());
+        let probe = ds(1, 23);
+        let xs: Vec<&[f64]> = vec![probe.row(0)];
+        assert_eq!(
+            s.predict_region_batch(&xs, 0.1),
+            vec![s.predict_region(probe.row(0), 0.1)]
+        );
+        assert_eq!(
+            o.p_values_batch(&xs, &[probe.y[0]]),
+            vec![o.p_value(probe.row(0), probe.y[0])]
+        );
+    }
+
+    #[test]
+    fn trait_learn_matches_refit_standard() {
+        let d = ds(25, 24);
+        let extra = ds(4, 25);
+        let mut inc = KnnRegressorStandard::new(3);
+        assert!(!CpRegressor::learn(&mut inc, extra.row(0), extra.y[0]));
+        inc.fit(&d);
+        let mut grown = d.clone();
+        for i in 0..extra.n() {
+            assert!(CpRegressor::learn(&mut inc, extra.row(i), extra.y[i]));
+            grown.x.extend_from_slice(extra.row(i));
+            grown.y.push(extra.y[i]);
+        }
+        assert_eq!(inc.n(), grown.n());
+        let mut refit = KnnRegressorStandard::new(3);
+        refit.fit(&grown);
+        let probe = ds(3, 26);
         for i in 0..probe.n() {
             assert_eq!(
                 inc.coefficients(probe.row(i)),

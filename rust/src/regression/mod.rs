@@ -7,6 +7,41 @@
 //!   regression baseline;
 //! - [`ridge`] — the ridge (RRCM) full CP regressor with incremental
 //!   Sherman–Morrison updates (the §8 "Discussion" extension).
+//!
+//! # Batched coefficient layout
+//!
+//! Every full-CP regressor reduces a test object `x` to affine score
+//! coefficients: per-training rays `coefs[i] = (a_i, b_i)` with
+//! `alpha_i(y~) = |a_i + b_i y~|`, plus the test ray `(a, b)`. The batch
+//! entry point is [`CpRegressor::coefficients_batch`]: given `xs`, it
+//! returns one `(coefs, a, b)` triple per test object, in input order —
+//! the same "one expensive row per object, shared precomputation per
+//! batch" axis as `CpMeasure::scores_batch` on the classification side:
+//!
+//! * **k-NN, standard** — the O(n^2) neighbour-statistics pass is
+//!   test-independent, so a batch computes it ONCE instead of once per
+//!   object (the per-object cost drops to one distance row + assembly);
+//! * **k-NN, optimized** — statistics are precomputed at fit time; the
+//!   batch path reuses one distance-row buffer across objects;
+//! * **ridge** — `M0 (X^T Y)` does not depend on the test object and is
+//!   hoisted out of the per-object Sherman–Morrison application.
+//!
+//! Downstream consumers ([`CpRegressor::predict_region_batch`],
+//! `Deployment::region_rows` in the coordinator) feed each triple to
+//! [`region::conformal_region`] per object — eps may differ per object
+//! because only the sweep, never the coefficients, depends on it.
+//!
+//! # Exactness contract
+//!
+//! Batched outputs are **bitwise identical** to the single-object path:
+//! for every `i`, `coefficients_batch(xs)[i]` must equal
+//! `coefficients(xs[i])` bit for bit (and hence regions and p-values
+//! computed from them are identical, not merely close). The contract is
+//! enforced by the batch-vs-single proptests in `rust/tests/proptests.rs`,
+//! pinned by the golden interval fixtures in
+//! `rust/tests/golden_regions.rs` (expected intervals from an
+//! independent Python reference), and asserted before timing by
+//! `rust/benches/batch_regression.rs`.
 
 pub mod knn_reg;
 pub mod region;
@@ -15,3 +50,134 @@ pub mod ridge;
 pub use knn_reg::{IcpKnnRegressor, KnnRegressorOptimized, KnnRegressorStandard};
 pub use region::{conformal_region, p_value_at, Interval, Region};
 pub use ridge::RidgeCp;
+
+use crate::data::RegressionDataset;
+
+/// One test object's affine score coefficients:
+/// `(per-training (a_i, b_i) rays, a, b)` with scores `|a_i + b_i y~|`
+/// for training examples and `|a + b y~|` for the test example.
+pub type Coefficients = (Vec<(f64, f64)>, f64, f64);
+
+/// A full-CP regressor usable by the serving coordinator: anything that
+/// maps a test object to affine score coefficients (see the module docs
+/// for the layout and the batched exactness contract).
+///
+/// `Send + Sync` so regression deployments can sit behind the
+/// coordinator's RwLock and be scored from a worker pool (the scoring
+/// methods take `&self`).
+pub trait CpRegressor: Send + Sync {
+    /// Human-readable regressor name (CLI, benches, error messages).
+    fn name(&self) -> String;
+
+    /// Train/precompute on the training bag.
+    fn fit(&mut self, ds: &RegressionDataset);
+
+    /// Affine score coefficients for one test object:
+    /// `(per-training (a_i, b_i), a, b)`.
+    fn coefficients(&self, x: &[f64]) -> Coefficients;
+
+    /// Batched coefficients, one triple per test object in input order.
+    ///
+    /// **Contract: identical output to per-object [`coefficients`]** —
+    /// `coefficients_batch(xs)[i]` equals `coefficients(xs[i])` bit for
+    /// bit. The default implementation trivially satisfies this by
+    /// looping; specialized implementations share the test-independent
+    /// precomputation across the batch (see the module docs).
+    ///
+    /// [`coefficients`]: CpRegressor::coefficients
+    fn coefficients_batch(&self, xs: &[&[f64]]) -> Vec<Coefficients> {
+        xs.iter().map(|x| self.coefficients(x)).collect()
+    }
+
+    /// Exact prediction region { y~ : p(y~) > eps } for one object.
+    fn predict_region(&self, x: &[f64], eps: f64) -> Region {
+        let (coefs, a, b) = self.coefficients(x);
+        conformal_region(&coefs, a, b, eps)
+    }
+
+    /// Batched regions at a shared eps; equals per-object
+    /// [`predict_region`] exactly (it consumes
+    /// [`coefficients_batch`], which is bit-identical by contract).
+    ///
+    /// [`predict_region`]: CpRegressor::predict_region
+    /// [`coefficients_batch`]: CpRegressor::coefficients_batch
+    fn predict_region_batch(&self, xs: &[&[f64]], eps: f64) -> Vec<Region> {
+        self.coefficients_batch(xs)
+            .into_iter()
+            .map(|(coefs, a, b)| conformal_region(&coefs, a, b, eps))
+            .collect()
+    }
+
+    /// Exact conformal p-value of the candidate label `y` for `x`.
+    fn p_value(&self, x: &[f64], y: f64) -> f64 {
+        let (coefs, a, b) = self.coefficients(x);
+        p_value_at(&coefs, a, b, y)
+    }
+
+    /// Batched p-values over paired `(xs[i], ys[i])`; bit-identical to
+    /// per-pair [`p_value`].
+    ///
+    /// [`p_value`]: CpRegressor::p_value
+    fn p_values_batch(&self, xs: &[&[f64]], ys: &[f64]) -> Vec<f64> {
+        assert_eq!(xs.len(), ys.len());
+        self.coefficients_batch(xs)
+            .into_iter()
+            .zip(ys)
+            .map(|((coefs, a, b), &y)| p_value_at(&coefs, a, b, y))
+            .collect()
+    }
+
+    /// Number of training examples currently fitted.
+    fn n(&self) -> usize;
+
+    /// Incrementally learn one example (online setting, §9). Returns
+    /// false when the regressor does not support online updates.
+    fn learn(&mut self, _x: &[f64], _y: f64) -> bool {
+        false
+    }
+}
+
+/// Boxed regressors forward every method — including the batch entry
+/// points, so a `Box<dyn CpRegressor>` keeps its concrete type's
+/// specialized batch path (mirrors the `CpMeasure` forwarding impl).
+impl<R: CpRegressor + ?Sized> CpRegressor for Box<R> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn fit(&mut self, ds: &RegressionDataset) {
+        (**self).fit(ds)
+    }
+
+    fn coefficients(&self, x: &[f64]) -> Coefficients {
+        (**self).coefficients(x)
+    }
+
+    fn coefficients_batch(&self, xs: &[&[f64]]) -> Vec<Coefficients> {
+        (**self).coefficients_batch(xs)
+    }
+
+    fn predict_region(&self, x: &[f64], eps: f64) -> Region {
+        (**self).predict_region(x, eps)
+    }
+
+    fn predict_region_batch(&self, xs: &[&[f64]], eps: f64) -> Vec<Region> {
+        (**self).predict_region_batch(xs, eps)
+    }
+
+    fn p_value(&self, x: &[f64], y: f64) -> f64 {
+        (**self).p_value(x, y)
+    }
+
+    fn p_values_batch(&self, xs: &[&[f64]], ys: &[f64]) -> Vec<f64> {
+        (**self).p_values_batch(xs, ys)
+    }
+
+    fn n(&self) -> usize {
+        (**self).n()
+    }
+
+    fn learn(&mut self, x: &[f64], y: f64) -> bool {
+        (**self).learn(x, y)
+    }
+}

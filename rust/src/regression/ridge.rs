@@ -18,6 +18,7 @@
 use crate::data::RegressionDataset;
 use crate::linalg::{self, dot, Mat};
 use crate::regression::region::{conformal_region, p_value_at, Region};
+use crate::regression::{Coefficients, CpRegressor};
 
 /// Full CP ridge regressor.
 pub struct RidgeCp {
@@ -55,25 +56,30 @@ impl RidgeCp {
         self.ds = Some(ds.clone());
     }
 
-    /// Affine residual coefficients for test object `x`:
-    /// returns (per-training (A_i, B_i), A_test, B_test).
-    pub fn coefficients(&self, x: &[f64]) -> (Vec<(f64, f64)>, f64, f64) {
+    pub fn n(&self) -> usize {
+        self.ds.as_ref().map_or(0, |d| d.n())
+    }
+
+    /// Shared assembly for the single and batched paths, given the
+    /// Sherman–Morrison ingredients `m0x = M0 x` and the test-independent
+    /// `m0_xty = M0 (X^T Y)`. Because both entry points funnel through
+    /// here, batched output is bit-identical to single-object output by
+    /// construction.
+    fn coefs_from(&self, x: &[f64], m0x: &[f64], m0_xty: &[f64]) -> Coefficients {
         let ds = self.ds.as_ref().expect("fit first");
-        let m0 = self.m0.as_ref().unwrap();
         let n = ds.n();
 
         // Sherman–Morrison: M = (G0 + x x^T)^-1 = M0 - M0 x x^T M0 / (1 + x^T M0 x)
-        let m0x = m0.matvec(x);
-        let denom = 1.0 + dot(x, &m0x);
+        let denom = 1.0 + dot(x, m0x);
         // w_a = M (X^T Y)  [note X~^T (Y,0) = X^T Y]
         // Apply SM without materializing M: M v = M0 v - m0x (m0x . v)/denom
-        let mv = |v: &[f64]| -> Vec<f64> {
-            let m0v = m0.matvec(v);
-            let corr = dot(&m0x, v) / denom;
-            m0v.iter().zip(&m0x).map(|(a, b)| a - b * corr).collect()
+        let mv = |m0v: &[f64], v: &[f64]| -> Vec<f64> {
+            let corr = dot(m0x, v) / denom;
+            m0v.iter().zip(m0x).map(|(a, b)| a - b * corr).collect()
         };
-        let w_a = mv(&self.xty);
-        let w_b = mv(x);
+        let w_a = mv(m0_xty, &self.xty);
+        // M0 x is exactly m0x, so w_b needs no extra matvec
+        let w_b = mv(m0x, x);
 
         // A_i = y_i - x_i . w_a ; B_i = -x_i . w_b (i <= n)
         let coefs: Vec<(f64, f64)> = (0..n)
@@ -88,14 +94,84 @@ impl RidgeCp {
         (coefs, a, b)
     }
 
+    /// Affine residual coefficients for test object `x`:
+    /// returns (per-training (A_i, B_i), A_test, B_test).
+    pub fn coefficients(&self, x: &[f64]) -> Coefficients {
+        let m0 = self.m0.as_ref().expect("fit first");
+        let m0x = m0.matvec(x);
+        let m0_xty = m0.matvec(&self.xty);
+        self.coefs_from(x, &m0x, &m0_xty)
+    }
+
+    /// Batched coefficients: `M0 (X^T Y)` does not depend on the test
+    /// object, so it is computed once per batch instead of once per
+    /// object. Bit-identical to per-object
+    /// [`coefficients`](Self::coefficients) because `Mat::matvec` is
+    /// deterministic and the assembly is shared.
+    pub fn coefficients_batch(&self, xs: &[&[f64]]) -> Vec<Coefficients> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let m0 = self.m0.as_ref().expect("fit first");
+        let m0_xty = m0.matvec(&self.xty);
+        xs.iter()
+            .map(|&x| {
+                let m0x = m0.matvec(x);
+                self.coefs_from(x, &m0x, &m0_xty)
+            })
+            .collect()
+    }
+
     pub fn predict_region(&self, x: &[f64], eps: f64) -> Region {
         let (coefs, a, b) = self.coefficients(x);
         conformal_region(&coefs, a, b, eps)
     }
 
+    /// Batched regions at a shared eps; exactly equals mapping
+    /// [`predict_region`](Self::predict_region) over `xs`.
+    pub fn predict_region_batch(&self, xs: &[&[f64]], eps: f64) -> Vec<Region> {
+        self.coefficients_batch(xs)
+            .into_iter()
+            .map(|(coefs, a, b)| conformal_region(&coefs, a, b, eps))
+            .collect()
+    }
+
     pub fn p_value(&self, x: &[f64], y: f64) -> f64 {
         let (coefs, a, b) = self.coefficients(x);
         p_value_at(&coefs, a, b, y)
+    }
+
+    /// Batched p-values over paired `(xs[i], ys[i])`; bit-identical to
+    /// per-pair [`p_value`](Self::p_value).
+    pub fn p_values_batch(&self, xs: &[&[f64]], ys: &[f64]) -> Vec<f64> {
+        assert_eq!(xs.len(), ys.len());
+        self.coefficients_batch(xs)
+            .into_iter()
+            .zip(ys)
+            .map(|((coefs, a, b), &y)| p_value_at(&coefs, a, b, y))
+            .collect()
+    }
+}
+
+impl CpRegressor for RidgeCp {
+    fn name(&self) -> String {
+        format!("ridge(rho={})", self.rho)
+    }
+
+    fn fit(&mut self, ds: &RegressionDataset) {
+        RidgeCp::fit(self, ds)
+    }
+
+    fn coefficients(&self, x: &[f64]) -> Coefficients {
+        RidgeCp::coefficients(self, x)
+    }
+
+    fn coefficients_batch(&self, xs: &[&[f64]]) -> Vec<Coefficients> {
+        RidgeCp::coefficients_batch(self, xs)
+    }
+
+    fn n(&self) -> usize {
+        RidgeCp::n(self)
     }
 }
 
@@ -167,6 +243,38 @@ mod tests {
             assert!((ga - wa).abs() < 1e-8);
             assert!((gb - wb).abs() < 1e-8);
         }
+    }
+
+    #[test]
+    fn batch_coefficients_bitwise_identical() {
+        let d = ds(40, 7);
+        let mut r = RidgeCp::new(0.5);
+        r.fit(&d);
+        let probe = ds(5, 8);
+        let mut xs: Vec<&[f64]> = (0..probe.n()).map(|i| probe.row(i)).collect();
+        xs.push(d.row(3)); // duplicate of a training row
+        let batch = r.coefficients_batch(&xs);
+        assert_eq!(batch.len(), xs.len());
+        for (i, &x) in xs.iter().enumerate() {
+            let (sc, sa, sb) = r.coefficients(x);
+            let (bc, ba, bb) = &batch[i];
+            assert_eq!(sa.to_bits(), ba.to_bits(), "a i={i}");
+            assert_eq!(sb.to_bits(), bb.to_bits(), "b i={i}");
+            assert_eq!(sc.len(), bc.len());
+            for (u, v) in sc.iter().zip(bc) {
+                assert_eq!(u.0.to_bits(), v.0.to_bits(), "A_i i={i}");
+                assert_eq!(u.1.to_bits(), v.1.to_bits(), "B_i i={i}");
+            }
+        }
+        assert!(r.coefficients_batch(&[]).is_empty());
+        assert_eq!(
+            r.predict_region_batch(&xs[..1], 0.1),
+            vec![r.predict_region(xs[0], 0.1)]
+        );
+        assert_eq!(
+            r.p_values_batch(&xs[..1], &[probe.y[0]]),
+            vec![r.p_value(xs[0], probe.y[0])]
+        );
     }
 
     #[test]

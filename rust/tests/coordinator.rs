@@ -6,10 +6,12 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use exact_cp::config::{MeasureConfig, MeasureKind, ServeConfig};
+use exact_cp::config::{MeasureConfig, MeasureKind, RegressorKind, ServeConfig};
 use exact_cp::coordinator::server::{serve, Server};
 use exact_cp::coordinator::state::{Deployment, Registry};
-use exact_cp::data::{make_classification, ClassificationSpec};
+use exact_cp::data::{
+    make_classification, make_regression, ClassificationSpec, RegressionSpec,
+};
 use exact_cp::util::json::Json;
 
 fn registry(n: usize) -> Arc<Registry> {
@@ -33,6 +35,41 @@ fn registry(n: usize) -> Arc<Registry> {
         None,
     ));
     reg.insert(Deployment::train("kde", MeasureKind::Kde, &cfg, &ds, None));
+    reg
+}
+
+/// Classification registry plus two regression deployments ("reg" =
+/// optimized k-NN regressor, "rrcm" = ridge) trained on the same
+/// synthetic 4-feature regression set.
+fn mixed_registry(n: usize) -> Arc<Registry> {
+    let reg = registry(n);
+    let rds = make_regression(
+        &RegressionSpec {
+            n_samples: n,
+            n_features: 4,
+            n_informative: 3,
+            noise: 3.0,
+        },
+        5,
+    );
+    let cfg = MeasureConfig {
+        k: 3,
+        ..Default::default()
+    };
+    reg.insert(Deployment::train_regression(
+        "reg",
+        RegressorKind::Knn,
+        &cfg,
+        &rds,
+        None,
+    ));
+    reg.insert(Deployment::train_regression(
+        "rrcm",
+        RegressorKind::Ridge,
+        &cfg,
+        &rds,
+        None,
+    ));
     reg
 }
 
@@ -220,6 +257,164 @@ fn unlearn_then_predict_still_works() {
     .unwrap();
     let resp = server.handle(&pr);
     assert!(resp.get("p_values").is_some());
+}
+
+#[test]
+fn tcp_predict_region_round_trip() {
+    let reg = mixed_registry(40);
+    let x = [0.3, -0.1, 0.2, 0.05];
+    let expected = reg
+        .with("reg", |d| d.predict_region(&x, 0.1, Some(1.0)))
+        .unwrap()
+        .unwrap();
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 2,
+            max_wait_us: 200,
+            ..Default::default()
+        },
+        reg,
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv2 = server.clone();
+    let handle = std::thread::spawn(move || serve(srv2, listener));
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let resp = send(
+        &mut conn,
+        r#"{"op":"predict_region","deployment":"reg","x":[0.3,-0.1,0.2,0.05],"epsilon":0.1,"y":1.0,"id":7}"#,
+    );
+    assert_eq!(resp.get("id").and_then(Json::as_f64), Some(7.0));
+    let intervals = resp.get("intervals").unwrap().as_arr().unwrap();
+    assert_eq!(intervals.len(), expected.region.intervals.len());
+    for (iv, want) in intervals.iter().zip(&expected.region.intervals) {
+        // finite endpoints survive the wire bit-exactly (shortest
+        // round-trip float formatting)
+        assert_eq!(iv.as_f64_vec().unwrap(), vec![want.lo, want.hi]);
+    }
+    assert_eq!(resp.get("p_value").and_then(Json::as_f64), expected.p_at_y);
+    // the ridge deployment answers too; no candidate y -> no p_value
+    let resp = send(
+        &mut conn,
+        r#"{"op":"predict_region","deployment":"rrcm","x":[0.3,-0.1,0.2,0.05],"epsilon":0.3}"#,
+    );
+    assert!(resp.get("intervals").is_some(), "{}", resp.encode());
+    assert!(resp.get("p_value").is_none());
+    let bye = send(&mut conn, r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn mixed_classification_and_regression_batches() {
+    // Concurrent predict + predict_region traffic shares the dynamic
+    // batcher; the worker must split jobs by deployment AND op kind,
+    // and every answer must match its unbatched single-object path.
+    let reg = mixed_registry(40);
+    let expected_ps = reg.with("sknn", |d| d.p_values(&[0.1; 30])).unwrap();
+    let expected_region = reg
+        .with("reg", |d| d.predict_region(&[0.0; 4], 0.1, None))
+        .unwrap()
+        .unwrap();
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 2,
+            max_batch: 16,
+            max_wait_us: 2_000,
+            ..Default::default()
+        },
+        reg,
+    ));
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let srv = server.clone();
+            handles.push(s.spawn(move || {
+                let req = if i % 2 == 0 {
+                    Json::parse(&format!(
+                        r#"{{"op":"predict","deployment":"sknn","x":{},"epsilon":0.1}}"#,
+                        x30()
+                    ))
+                    .unwrap()
+                } else {
+                    Json::parse(
+                        r#"{"op":"predict_region","deployment":"reg","x":[0,0,0,0],"epsilon":0.1}"#,
+                    )
+                    .unwrap()
+                };
+                (i, srv.handle(&req))
+            }));
+        }
+        for h in handles {
+            let (i, resp) = h.join().unwrap();
+            if i % 2 == 0 {
+                let ps = resp
+                    .get("p_values")
+                    .unwrap_or_else(|| panic!("{}", resp.encode()))
+                    .as_f64_vec()
+                    .unwrap();
+                assert_eq!(ps, expected_ps, "classification answer drifted");
+            } else {
+                let ivs = resp
+                    .get("intervals")
+                    .unwrap_or_else(|| panic!("{}", resp.encode()))
+                    .as_arr()
+                    .unwrap();
+                assert_eq!(ivs.len(), expected_region.region.intervals.len());
+                for (iv, want) in
+                    ivs.iter().zip(&expected_region.region.intervals)
+                {
+                    assert_eq!(
+                        iv.as_f64_vec().unwrap(),
+                        vec![want.lo, want.hi],
+                        "region answer drifted"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn tcp_observe_round_trip() {
+    let reg = registry(30);
+    let server = Arc::new(Server::start(ServeConfig::default(), reg));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv2 = server.clone();
+    let handle = std::thread::spawn(move || serve(srv2, listener));
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    // batched observe: the first row bootstraps the tester (null
+    // p-value), the rest are scored against the batch-start state
+    let resp = send(
+        &mut conn,
+        r#"{"op":"observe","tester":"drift","xs":[[0.0,0.0],[0.1,0.0],[0.0,0.2],[0.3,0.1]],"k":3,"seed":1}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    let ps = resp.get("p_values").unwrap().as_arr().unwrap();
+    assert_eq!(ps.len(), 4);
+    assert!(matches!(ps[0], Json::Null), "bootstrap p must be null");
+    assert!(ps[1..].iter().all(|p| p.as_f64().is_some()));
+    assert_eq!(resp.get("n").and_then(Json::as_f64), Some(4.0));
+    assert!(resp.get("log_martingale").and_then(Json::as_f64).is_some());
+    assert!(resp.get("alarm").and_then(Json::as_bool).is_some());
+    // the tester persists: a follow-up single observation continues it
+    let resp = send(
+        &mut conn,
+        r#"{"op":"observe","tester":"drift","x":[0.2,0.2]}"#,
+    );
+    assert_eq!(resp.get("n").and_then(Json::as_f64), Some(5.0));
+    // dimension mismatch is a clean error, not a crash
+    let resp = send(
+        &mut conn,
+        r#"{"op":"observe","tester":"drift","x":[1.0]}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    let bye = send(&mut conn, r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    handle.join().unwrap().unwrap();
 }
 
 #[test]

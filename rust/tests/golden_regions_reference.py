@@ -1,0 +1,191 @@
+#!/usr/bin/env python3
+"""Independent reference for tests/golden_regions.rs.
+
+Regenerate the fixture block with:
+
+    python3 tests/golden_regions_reference.py > /tmp/golden.rs
+
+and paste the output into golden_regions.rs between the GENERATED
+markers.
+
+The point of this script is INDEPENDENCE from the Rust implementation:
+
+* k-NN coefficients are computed with explicit sorted neighbour lists
+  (no select_nth, no precomputed statistics), following the paper's
+  formulas directly: with (distance, index) neighbour ordering and the
+  strict d(x_i, x) < Delta_i^k entry rule,
+
+      x in kNN(x_i):  a_i = y_i - (1/k) sum_{k-1} ,  b_i = -1/k
+      otherwise:      a_i = y_i - (1/k) sum_k     ,  b_i = 0
+      test:           a   = -(1/k) sum_k(x)       ,  b   = 1
+
+* ridge (RRCM) coefficients come from the explicit augmented hat matrix
+  H = Xa (Xa^T Xa + rho I)^-1 Xa^T over the (n+1)-row design — no
+  Sherman-Morrison shortcut.
+
+* regions are assembled from scratch: collect the critical points
+  (roots of (a_i -+ a) + (b_i -+ b) y = 0), then classify every open
+  segment between consecutive roots by evaluating the direct p-value at
+  its midpoint. The region is the closure of the in-region segments
+  (conformal regions from |.| score ties are closed sets).
+
+The generator asserts safety margins so that float noise between the
+two implementations cannot flip any discrete decision:
+  * consecutive critical points separated by > 1e-5,
+  * k-NN entry decisions and neighbour selections decided by > 1e-7,
+  * score ties at the golden candidate labels bounded away by > 1e-7,
+  * all regions bounded (no infinite endpoints),
+  * no isolated single-point region components.
+"""
+
+import math
+import random
+
+import numpy as np
+
+N, P, K, RHO = 24, 3, 3, 1.0
+EPSES = (0.1, 0.3)
+
+rng = random.Random(20210707)
+X = [[round(rng.uniform(-3.0, 3.0), 4) for _ in range(P)] for _ in range(N)]
+
+
+def signal(row):
+    return 2.0 * row[0] - 1.5 * row[1] + 0.5 * row[2]
+
+
+Y = [round(signal(r) + rng.gauss(0.0, 1.0), 4) for r in X]
+PROBES = [[round(rng.uniform(-3.0, 3.0), 4) for _ in range(P)] for _ in range(4)]
+CAND_Y = [round(signal(p) + rng.gauss(0.0, 1.0), 4) for p in PROBES]
+
+
+def dist(u, v):
+    return math.sqrt(sum((a - b) ** 2 for a, b in zip(u, v)))
+
+
+def knn_coefs(x):
+    """Explicit k-NN CP coefficients for test object x."""
+    coefs = []
+    d_test = [dist(X[i], x) for i in range(N)]
+    for i in range(N):
+        items = sorted(
+            ((dist(X[i], X[j]), j) for j in range(N) if j != i)
+        )
+        # neighbour selection must be decided by a clear margin
+        assert items[K][0] - items[K - 1][0] > 1e-7, "kNN tie at boundary"
+        sum_k = sum(Y[j] for _, j in items[:K])
+        sum_k1 = sum(Y[j] for _, j in items[: K - 1])
+        delta_k = items[K - 1][0]
+        assert abs(d_test[i] - delta_k) > 1e-7, "entry decision too close"
+        if d_test[i] < delta_k:
+            coefs.append((Y[i] - sum_k1 / K, -1.0 / K))
+        else:
+            coefs.append((Y[i] - sum_k / K, 0.0))
+    items = sorted((d_test[j], j) for j in range(N))
+    assert items[K][0] - items[K - 1][0] > 1e-7, "test kNN tie at boundary"
+    a = -sum(Y[j] for _, j in items[:K]) / K
+    return coefs, a, 1.0
+
+
+def ridge_coefs(x):
+    """Explicit augmented-hat-matrix RRCM coefficients."""
+    xa = np.vstack([np.array(X, dtype=float), np.array(x, dtype=float)])
+    minv = np.linalg.inv(xa.T @ xa + RHO * np.eye(P))
+    y0 = np.append(np.array(Y, dtype=float), 0.0)
+    e = np.zeros(N + 1)
+    e[N] = 1.0
+    w_a = minv @ (xa.T @ y0)
+    w_b = minv @ (xa.T @ e)
+    coefs = [
+        (y0[i] - float(xa[i] @ w_a), e[i] - float(xa[i] @ w_b))
+        for i in range(N)
+    ]
+    a = y0[N] - float(xa[N] @ w_a)
+    b = e[N] - float(xa[N] @ w_b)
+    return coefs, a, b
+
+
+def p_value(coefs, a, b, y):
+    alpha = abs(a + b * y)
+    ge = sum(1 for ai, bi in coefs if abs(ai + bi * y) >= alpha)
+    return (ge + 1) / (len(coefs) + 1)
+
+
+def region(coefs, a, b, eps):
+    """Closure of {y : p(y) > eps}, assembled by segment classification."""
+    pts = set()
+    for ai, bi in coefs:
+        for c, s in ((ai - a, bi - b), (ai + a, bi + b)):
+            if abs(s) > 1e-12:
+                pts.add(float(-c / s))
+    roots = sorted(pts)
+    for r1, r2 in zip(roots, roots[1:]):
+        assert r2 - r1 > 1e-5, f"critical points too close: {r1} {r2}"
+    mids = [roots[0] - 1.0]
+    mids += [(r1 + r2) / 2.0 for r1, r2 in zip(roots, roots[1:])]
+    mids.append(roots[-1] + 1.0)
+    seg_in = [p_value(coefs, a, b, m) > eps for m in mids]
+    assert not seg_in[0] and not seg_in[-1], "region must be bounded"
+    # closed-set semantics: a root with p > eps must touch an in-region
+    # segment (no isolated points — would complicate the fixture)
+    for idx, r in enumerate(roots):
+        if p_value(coefs, a, b, r) > eps:
+            assert seg_in[idx] or seg_in[idx + 1], f"isolated point at {r}"
+    out, start = [], None
+    for i, s in enumerate(seg_in):
+        if s and start is None:
+            start = roots[i - 1]
+        if not s and start is not None:
+            out.append((start, roots[i - 1]))
+            start = None
+    assert start is None
+    return out
+
+
+def tie_margin(coefs, a, b, y):
+    alpha = abs(a + b * y)
+    return min(abs(abs(ai + bi * y) - alpha) for ai, bi in coefs)
+
+
+def flat(rows):
+    return [v for row in rows for v in row]
+
+
+def fmt(vals, per_line=6):
+    lines = []
+    for i in range(0, len(vals), per_line):
+        lines.append(", ".join(repr(float(v)) for v in vals[i : i + per_line]))
+    return ",\n    ".join(lines)
+
+
+print("// ---- GENERATED by golden_regions_reference.py — do not edit ----")
+print(f"const X: [f64; {N * P}] = [\n    {fmt(flat(X))},\n];")
+print(f"const Y: [f64; {N}] = [\n    {fmt(Y)},\n];")
+print(f"const PROBES: [f64; {4 * P}] = [\n    {fmt(flat(PROBES))},\n];")
+print(f"const CAND_Y: [f64; 4] = [\n    {fmt(CAND_Y)},\n];")
+
+for name, fn in (("KNN", knn_coefs), ("RIDGE", ridge_coefs)):
+    golden, pvals = [], []
+    for probe, cy in zip(PROBES, CAND_Y):
+        coefs, a, b = fn(probe)
+        per_eps = []
+        for eps in EPSES:
+            per_eps.append(region(coefs, a, b, eps))
+        golden.append(per_eps)
+        assert tie_margin(coefs, a, b, cy) > 1e-7, "p-value tie too close"
+        pvals.append(p_value(coefs, a, b, cy))
+    print(f"/// Golden intervals per probe: (eps = {EPSES[0]}, eps = {EPSES[1]}).")
+    print(
+        f"const {name}_REGIONS: [(&[(f64, f64)], &[(f64, f64)]); 4] = ["
+    )
+    for per_eps in golden:
+        cells = []
+        for ivs in per_eps:
+            body = ", ".join(f"({repr(lo)}, {repr(hi)})" for lo, hi in ivs)
+            cells.append(f"&[{body}]")
+        print(f"    ({cells[0]}, {cells[1]}),")
+    print("];")
+    print(
+        f"const {name}_PVALS: [f64; 4] = [{', '.join(repr(p) for p in pvals)}];"
+    )
+print("// ---- end GENERATED ----")

@@ -7,9 +7,16 @@
 use exact_cp::config::{MeasureConfig, MeasureKind};
 use exact_cp::coordinator::factory::{build_measure, build_standard_measure};
 use exact_cp::cp::pvalue::p_value;
-use exact_cp::data::{make_classification, ClassificationSpec, Dataset, Rng};
+use exact_cp::data::{
+    make_classification, make_regression, ClassificationSpec, Dataset,
+    RegressionDataset, RegressionSpec, Rng,
+};
 use exact_cp::linalg::select::KBest;
-use exact_cp::regression::{conformal_region, p_value_at};
+use exact_cp::regression::region::ge_set;
+use exact_cp::regression::{
+    conformal_region, p_value_at, Coefficients, CpRegressor,
+    KnnRegressorOptimized, KnnRegressorStandard, RidgeCp,
+};
 
 /// One randomized case of the measure-exactness property.
 #[derive(Clone, Copy, Debug)]
@@ -346,6 +353,174 @@ fn prop_kbest_invariants() {
         let want: Vec<f64> = all.into_iter().take(k).collect();
         assert_eq!(vals, &want[..], "holds the k smallest");
     }
+}
+
+#[test]
+fn prop_region_primitive_invariants() {
+    // structural invariants of the exact-region machinery on random
+    // affine score systems, including degenerate b_i = 0 rays and
+    // near-parallel (b_i ~ b) pairs:
+    //   ge_set:         at most 2 intervals, each non-empty, pointwise
+    //                   equal to |a_i + b_i y| >= |a + b y|
+    //   conformal_region: intervals sorted, pairwise disjoint (touching
+    //                   ones merged), p_value_at(y) > eps <=> contains(y)
+    let mut rng = Rng::seed_from(0x5EED);
+    for _ in 0..80 {
+        let n = 3 + rng.below(30);
+        let coefs: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                (
+                    rng.normal() * 4.0,
+                    match rng.below(4) {
+                        0 => 0.0, // kNN-style degenerate ray
+                        1 => -1.0 / (1.0 + rng.below(5) as f64),
+                        2 => 1.0 + rng.normal() * 1e-9, // ~parallel to test
+                        _ => rng.normal() * 0.8,
+                    },
+                )
+            })
+            .collect();
+        let a = rng.normal() * 2.0;
+        let b = match rng.below(3) {
+            0 => 1.0,
+            1 => -1.0,
+            _ => 0.5 + rng.f64(),
+        };
+        for &(ai, bi) in &coefs {
+            let set = ge_set(ai, bi, a, b);
+            assert!(set.len() <= 2, "ge_set returned {set:?}");
+            for iv in &set {
+                assert!(iv.lo <= iv.hi, "empty interval {iv:?}");
+            }
+            for _ in 0..8 {
+                let y = rng.normal() * 6.0;
+                let margin = (ai + bi * y).abs() - (a + b * y).abs();
+                if margin.abs() < 1e-9 {
+                    continue; // too close to a critical point to judge
+                }
+                let got = set.iter().any(|iv| iv.contains(y));
+                assert_eq!(
+                    got,
+                    margin >= 0.0,
+                    "ge_set({ai},{bi},{a},{b}) at y={y}: {set:?}"
+                );
+            }
+        }
+        let eps = 0.02 + rng.f64() * 0.6;
+        let region = conformal_region(&coefs, a, b, eps);
+        for iv in &region.intervals {
+            assert!(iv.lo <= iv.hi, "empty interval in {region:?}");
+        }
+        for w in region.intervals.windows(2) {
+            assert!(
+                w[0].hi < w[1].lo,
+                "intervals must be sorted and disjoint: {region:?}"
+            );
+        }
+        for _ in 0..20 {
+            let y = rng.normal() * 8.0;
+            let near_crit = coefs.iter().any(|&(ai, bi)| {
+                ((ai + bi * y).abs() - (a + b * y).abs()).abs() < 1e-7
+            });
+            if near_crit {
+                continue;
+            }
+            assert_eq!(
+                region.contains(y),
+                p_value_at(&coefs, a, b, y) > eps,
+                "n={n} a={a} b={b} eps={eps} y={y} region={region:?}"
+            );
+        }
+    }
+}
+
+/// Bit-for-bit equality of one regression `Coefficients` triple.
+fn coefs_identical(u: &Coefficients, v: &Coefficients) -> bool {
+    u.1.to_bits() == v.1.to_bits()
+        && u.2.to_bits() == v.2.to_bits()
+        && u.0.len() == v.0.len()
+        && u.0
+            .iter()
+            .zip(&v.0)
+            .all(|(x, y)| x.0.to_bits() == y.0.to_bits() && x.1.to_bits() == y.1.to_bits())
+}
+
+fn reg_dataset(n: usize, p: usize, seed: u64) -> RegressionDataset {
+    make_regression(
+        &RegressionSpec {
+            n_samples: n,
+            n_features: p,
+            n_informative: p.min(3),
+            noise: 4.0,
+        },
+        seed,
+    )
+}
+
+#[test]
+fn prop_regression_batch_equals_per_object_bitwise() {
+    // THE regression batch contract: for both kNN variants and ridge,
+    // coefficients_batch / predict_region_batch / p_values_batch over a
+    // random probe set (with duplicated probes and a probe equal to a
+    // training row) match the per-object path bit for bit — on the raw
+    // dataset AND on a quantized-label copy full of duplicate y values.
+    check("reg-batch-vs-single", 15, |c| {
+        let train = reg_dataset(c.n, c.p, c.seed);
+        let probe = reg_dataset(6, c.p, c.seed + 1);
+        let mut xs: Vec<&[f64]> = (0..probe.n()).map(|i| probe.row(i)).collect();
+        xs.push(probe.row(0)); // duplicate probe
+        xs.push(train.row(c.n / 2)); // probe identical to a training row
+        let k = c.k.min(c.n - 1).max(1);
+        let mut quant = train.clone();
+        for y in quant.y.iter_mut() {
+            *y = (*y / 10.0).round() * 10.0; // duplicate-y edge case
+        }
+        for ds in [&train, &quant] {
+            let mut s = KnnRegressorStandard::new(k);
+            let mut o = KnnRegressorOptimized::new(k);
+            let mut r = RidgeCp::new(1.0);
+            s.fit(ds);
+            o.fit(ds);
+            r.fit(ds);
+            let regs: [&dyn CpRegressor; 3] = [&s, &o, &r];
+            for m in regs {
+                let batch = m.coefficients_batch(&xs);
+                if batch.len() != xs.len() {
+                    return false;
+                }
+                for (got, &x) in batch.iter().zip(&xs) {
+                    if !coefs_identical(got, &m.coefficients(x)) {
+                        return false;
+                    }
+                }
+                // empty and singleton batches
+                if !m.coefficients_batch(&[]).is_empty() {
+                    return false;
+                }
+                let one = m.coefficients_batch(&xs[..1]);
+                if one.len() != 1 || !coefs_identical(&one[0], &m.coefficients(xs[0])) {
+                    return false;
+                }
+                // regions and p-values ride on the same coefficients,
+                // so they must agree exactly too
+                let regions = m.predict_region_batch(&xs, 0.1);
+                for (got, &x) in regions.iter().zip(&xs) {
+                    if *got != m.predict_region(x, 0.1) {
+                        return false;
+                    }
+                }
+                let ys: Vec<f64> =
+                    (0..xs.len()).map(|i| ds.y[i % ds.n()]).collect();
+                let ps = m.p_values_batch(&xs, &ys);
+                for (i, &x) in xs.iter().enumerate() {
+                    if ps[i].to_bits() != m.p_value(x, ys[i]).to_bits() {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
 }
 
 #[test]
