@@ -9,6 +9,7 @@ Entry points (all f32; n, p are padded bucket shapes):
 
   pairwise      (n,p),(n,p)                    -> (n,n)   sq. distances
   dist_row      (1,p),(n,p)                    -> (1,n)   test-point row
+  dist_matrix   (m,p),(n,p)                    -> (m,n)   test-batch matrix
   kde_row       (1,p),(n,p),(1,1)              -> (1,n)   Gaussian row
   knn_update    (1,p),(n,p),(n,),(n,),(n,)     -> (1,n)   fused §3.1 update
   lssvm_update  (q,1),(q,q),(q,1),3x(1,1)      -> (q,1),(q,q)
@@ -42,6 +43,11 @@ def pairwise(a, b):
 def dist_row_fn(x, b):
     """Prediction-phase distance row for one test point."""
     return (dist_row(x, b),)
+
+
+def dist_matrix_fn(a, b):
+    """Prediction-phase m x n squared-distance matrix for a test batch."""
+    return (pairwise_sq_dists(a, b),)
 
 
 def kde_row_fn(x, b, h2):
@@ -87,6 +93,9 @@ def lssvm_update_fn(w, c, phi, y, rho, sign):
 ROW_BUCKETS = (256, 1024, 4096, 16384)
 P_BUCKETS = (32, 784)
 Q_BUCKETS = (32, 256)
+# Test-batch row buckets for dist_matrix (multiples of the 128 tile;
+# mirrored by rust/src/runtime/registry.rs::M_BUCKETS).
+M_BUCKETS = (128, 512)
 
 
 def entry_points():
@@ -109,6 +118,11 @@ def entry_points():
             s = jax.ShapeDtypeStruct((1, 1), f32)
             out.append((f"pairwise_n{n}_p{p}", pairwise, (an, an)))
             out.append((f"kde_matrix_n{n}_p{p}", kde_matrix_fn, (an, an, s)))
+            # Rectangular test-batch distance matrices (m test rows).
+            for m in M_BUCKETS:
+                am = jax.ShapeDtypeStruct((m, p), f32)
+                out.append(
+                    (f"dist_matrix_m{m}_n{n}_p{p}", dist_matrix_fn, (am, an)))
     for q in Q_BUCKETS:
         wq = jax.ShapeDtypeStruct((q, 1), f32)
         cq = jax.ShapeDtypeStruct((q, q), f32)

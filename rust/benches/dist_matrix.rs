@@ -1,0 +1,113 @@
+//! Bench: the tiled m x n distance-matrix kernel vs the per-row loop.
+//!
+//! This is the acceptance gate for the batch distance kernel
+//! (ROADMAP "Batch-level distance kernels"): at the serving shape
+//! m=64 test objects, n=2000 training rows, p=32 features, the tiled
+//! `dist_matrix_sq_into` must be at least 2x faster than calling
+//! `dist_row_sq_into` once per test row. Before timing, the bench
+//! asserts the exactness contract: the matrix is bit-identical to the
+//! stacked per-row outputs, at every worker count.
+//!
+//! Results are written to `BENCH_dist_matrix.json`. Smoke mode
+//! (`BENCH_QUICK=1` or a `--test` argument, used by CI) runs the
+//! bit-identity asserts and emits the JSON but skips the 2x gate —
+//! shared CI runners make wall-clock gates flaky.
+
+use std::time::Duration;
+
+use exact_cp::linalg::{
+    dist_matrix_sq_into, dist_matrix_sq_into_workers, dist_row_sq_into,
+};
+
+const M: usize = 64;
+const N: usize = 2000;
+const P: usize = 32;
+
+/// xorshift fill, same generator the linalg unit tests use.
+fn fill(seed: u64, len: usize) -> Vec<f64> {
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    (0..len)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+        })
+        .collect()
+}
+
+fn per_row_loop(xs: &[f64], rows: &[f64], out: &mut [f64]) {
+    let n = rows.len() / P;
+    for (x, o) in xs.chunks_exact(P).zip(out.chunks_exact_mut(n)) {
+        dist_row_sq_into(x, rows, P, o);
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_QUICK").is_ok()
+        || std::env::args().any(|a| a == "--test");
+    let budget = Duration::from_millis(if smoke { 150 } else { 1500 });
+
+    let xs = fill(1, M * P);
+    let rows = fill(2, N * P);
+
+    // ---- exactness contract (always enforced) -----------------------
+    let mut rowwise = vec![0.0; M * N];
+    per_row_loop(&xs, &rows, &mut rowwise);
+    let mut matrix = vec![0.0; M * N];
+    dist_matrix_sq_into(&xs, &rows, P, &mut matrix);
+    for (i, (a, b)) in matrix.iter().zip(&rowwise).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "entry {i} diverges");
+    }
+    for workers in [1usize, 2, 4] {
+        let mut par = vec![0.0; M * N];
+        dist_matrix_sq_into_workers(&xs, &rows, P, workers, &mut par);
+        for (i, (a, b)) in par.iter().zip(&rowwise).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "workers={workers}: entry {i} diverges"
+            );
+        }
+    }
+    println!("exactness: matrix == stacked rows, workers {{1,2,4}} (bitwise)");
+
+    // ---- timing -----------------------------------------------------
+    println!("== dist_matrix: m={M} x n={N} at p={P} ==");
+    let mut out = vec![0.0; M * N];
+    let t_rows = exact_cp::bench_harness::timing::microbench(
+        "per-row loop (dist_row_sq_into x m)",
+        budget,
+        || {
+            per_row_loop(&xs, &rows, &mut out);
+            out[0]
+        },
+    );
+    let t_matrix = exact_cp::bench_harness::timing::microbench(
+        "tiled matrix (dist_matrix_sq_into)",
+        budget,
+        || {
+            dist_matrix_sq_into(&xs, &rows, P, &mut out);
+            out[0]
+        },
+    );
+    let speedup = t_rows / t_matrix;
+    println!("dist_matrix: tiled speedup {speedup:.2}x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"dist_matrix\",\n  \"m\": {M},\n  \"n\": {N},\n  \
+         \"p\": {P},\n  \"per_row_s\": {t_rows:.9},\n  \
+         \"matrix_s\": {t_matrix:.9},\n  \"speedup\": {speedup:.4},\n  \
+         \"smoke\": {smoke}\n}}\n"
+    );
+    std::fs::write("BENCH_dist_matrix.json", &json)
+        .expect("writing BENCH_dist_matrix.json");
+    println!("wrote BENCH_dist_matrix.json");
+
+    if !smoke {
+        assert!(
+            speedup >= 2.0,
+            "tiled kernel must be >= 2x the per-row loop, got {speedup:.2}x"
+        );
+    }
+}

@@ -33,7 +33,7 @@ const EPS: f64 = 0.1;
 
 fn main() {
     // ---- L1/L2 artifacts -> runtime engine --------------------------
-    let engine = select_engine(true, "artifacts");
+    let engine = select_engine(true, "artifacts", 1);
     println!("distance engine: {}", engine.name());
     if engine.name() != "pjrt" {
         println!("  (run `make artifacts` first for the PJRT/Pallas path)");

@@ -140,6 +140,9 @@ pub struct ServeConfig {
     pub workers: usize,
     /// bounded queue depth before backpressure rejects
     pub queue_depth: usize,
+    /// scoped worker threads inside one distance-matrix launch
+    /// (1 = serial; any value yields bit-identical output)
+    pub dist_workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -151,6 +154,7 @@ impl Default for ServeConfig {
             default_epsilon: 0.1,
             workers: 2,
             queue_depth: 1024,
+            dist_workers: 1,
         }
     }
 }
@@ -230,6 +234,8 @@ impl Config {
                     .f64_or("serve.default_epsilon", d.serve.default_epsilon),
                 workers: doc.usize_or("serve.workers", d.serve.workers),
                 queue_depth: doc.usize_or("serve.queue_depth", d.serve.queue_depth),
+                dist_workers: doc
+                    .usize_or("serve.dist_workers", d.serve.dist_workers),
             },
             experiment: ExperimentConfig {
                 train_sizes: doc.usize_array("experiment.train_sizes"),
@@ -280,6 +286,7 @@ mod tests {
             k = 7
             [serve]
             max_batch = 8
+            dist_workers = 4
             "#,
         )
         .unwrap();
@@ -289,6 +296,8 @@ mod tests {
         assert_eq!(c.measure.b, 10);
         assert_eq!(c.serve.max_batch, 8);
         assert_eq!(c.serve.workers, 2);
+        assert_eq!(c.serve.dist_workers, 4);
+        assert_eq!(ServeConfig::default().dist_workers, 1);
     }
 
     #[test]

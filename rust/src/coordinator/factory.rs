@@ -93,8 +93,14 @@ pub fn build_regressor(
 }
 
 /// Engine selection honouring `use_pjrt` (falls back to native with a
-/// warning when artifacts are missing).
-pub fn select_engine(use_pjrt: bool, artifacts_dir: &str) -> Engine {
+/// warning when artifacts are missing). `dist_workers` sets the scoped
+/// thread count for native distance-matrix launches; output bytes are
+/// identical for every worker count.
+pub fn select_engine(
+    use_pjrt: bool,
+    artifacts_dir: &str,
+    dist_workers: usize,
+) -> Engine {
     if use_pjrt {
         match PjrtRuntime::open(artifacts_dir) {
             Ok(rt) => return Arc::new(PjrtEngine::new(Arc::new(rt))),
@@ -104,7 +110,7 @@ pub fn select_engine(use_pjrt: bool, artifacts_dir: &str) -> Engine {
             ),
         }
     }
-    crate::linalg::engine::native()
+    crate::linalg::engine::native_with_workers(dist_workers)
 }
 
 #[cfg(test)]
@@ -179,7 +185,13 @@ mod tests {
 
     #[test]
     fn select_engine_falls_back() {
-        let eng = select_engine(true, "/nonexistent/artifacts");
+        let eng = select_engine(true, "/nonexistent/artifacts", 1);
         assert_eq!(eng.name(), "native");
+    }
+
+    #[test]
+    fn select_engine_threads_native_path() {
+        let eng = select_engine(false, "artifacts", 4);
+        assert_eq!(eng.name(), "native-threaded");
     }
 }

@@ -1,6 +1,34 @@
 //! Distance kernels — the compute hot-spot of every nearest-neighbour
-//! family measure (native CPU implementations; `runtime::PjrtBackend`
+//! family measure (native CPU implementations; `runtime::PjrtEngine`
 //! provides the AOT/PJRT-executed alternative for the same entry points).
+//!
+//! # Batch matrix kernel: tiling scheme
+//!
+//! [`dist_matrix_sq_into`] computes the full `m x n` squared-distance
+//! matrix between `m` test rows and `n` training rows with cache-blocked
+//! tiling:
+//!
+//! - the training rows are walked in blocks of ~`L1_BLOCK_F64` doubles
+//!   so each block stays resident in L1 while every test tile visits it;
+//! - the test rows are walked in tiles of [`TILE_M`] rows, and the
+//!   [`sq_dist_x4`] microkernel accumulates all four test rows against
+//!   one training row per pass, so each training-row chunk is loaded
+//!   once per four outputs instead of once per output.
+//!
+//! # Determinism contract
+//!
+//! Every entry `out[i * n + j]` is produced by the *exact* floating
+//! point operation sequence of [`sq_dist`] applied to (test row `i`,
+//! training row `j`): same 4-lane accumulators, same lane-sum order,
+//! same scalar tail. Tiling only reorders *which entry is computed
+//! when*, never the operations inside an entry, so the matrix kernel is
+//! bit-identical to `m` stacked [`dist_row_sq_into`] calls — and
+//! [`dist_matrix_sq_into_workers`] hands disjoint (test-tile, output
+//! tile) pairs to scoped threads, so the output bytes are also
+//! independent of the worker count. Locked by `tests/proptests.rs` and
+//! the smoke mode of `benches/dist_matrix.rs`.
+
+use std::sync::Mutex;
 
 /// Which engine computes distance rows/matrices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -11,6 +39,16 @@ pub enum Backend {
     /// AOT-compiled Pallas/JAX kernels executed via the PJRT C API.
     Pjrt,
 }
+
+/// Test-row tile height of the matrix microkernel.
+const TILE_M: usize = 4;
+
+/// Training-row block budget in doubles (~24 KiB, half of a typical
+/// 48 KiB L1d so the test tile and output lines fit alongside it).
+const L1_BLOCK_F64: usize = 3072;
+
+/// Test rows per parallel job handed to a worker thread.
+const PAR_TILE_M: usize = 8;
 
 /// Squared Euclidean distance between two vectors.
 #[inline]
@@ -40,6 +78,56 @@ pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// Four squared distances at once: test rows `a0..a3` against one
+/// training row `b`. Each output replays [`sq_dist`]'s operation
+/// sequence exactly (4-lane accumulation over chunks, lane sum, scalar
+/// tail) so `sq_dist_x4(..)[t] == sq_dist(a_t, b)` bit for bit; the
+/// win is that every chunk of `b` is loaded once for four outputs.
+#[inline]
+fn sq_dist_x4(a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64], b: &[f64]) -> [f64; 4] {
+    debug_assert!(
+        a0.len() == b.len() && a1.len() == b.len() && a2.len() == b.len() && a3.len() == b.len()
+    );
+    let mut acc = [[0.0f64; 4]; TILE_M];
+    let c0 = a0.chunks_exact(4);
+    let c1 = a1.chunks_exact(4);
+    let c2 = a2.chunks_exact(4);
+    let c3 = a3.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (r0, r1, r2, r3, rb) = (
+        c0.remainder(),
+        c1.remainder(),
+        c2.remainder(),
+        c3.remainder(),
+        cb.remainder(),
+    );
+    for ((((x0, x1), x2), x3), y) in c0.zip(c1).zip(c2).zip(c3).zip(cb) {
+        let y0 = y[0];
+        let y1 = y[1];
+        let y2 = y[2];
+        let y3 = y[3];
+        for (t, x) in [x0, x1, x2, x3].into_iter().enumerate() {
+            let d0 = x[0] - y0;
+            let d1 = x[1] - y1;
+            let d2 = x[2] - y2;
+            let d3 = x[3] - y3;
+            acc[t][0] += d0 * d0;
+            acc[t][1] += d1 * d1;
+            acc[t][2] += d2 * d2;
+            acc[t][3] += d3 * d3;
+        }
+    }
+    let mut s = [0.0f64; TILE_M];
+    for (t, ra) in [r0, r1, r2, r3].into_iter().enumerate() {
+        s[t] = acc[t][0] + acc[t][1] + acc[t][2] + acc[t][3];
+        for (x, y) in ra.iter().zip(rb) {
+            let d = x - y;
+            s[t] += d * d;
+        }
+    }
+    s
+}
+
 /// Euclidean distance.
 #[inline]
 pub fn dist(a: &[f64], b: &[f64]) -> f64 {
@@ -63,18 +151,135 @@ pub fn dist_row_sq(x: &[f64], rows: &[f64], p: usize) -> Vec<f64> {
     out
 }
 
-/// Full `n x n` squared-distance matrix over the rows of `a` (row-major
-/// output). Exploits symmetry: computes the upper triangle and mirrors.
-pub fn pairwise_sq(a: &[f64], p: usize) -> Vec<f64> {
-    let n = a.len() / p;
-    let mut out = vec![0.0; n * n];
-    for i in 0..n {
-        let ri = &a[i * p..(i + 1) * p];
-        for j in i + 1..n {
-            let d = sq_dist(ri, &a[j * p..(j + 1) * p]);
-            out[i * n + j] = d;
-            out[j * n + i] = d;
+/// Full `m x n` squared-distance matrix between the rows of `xs`
+/// (`m x p`, the test batch) and the rows of `rows` (`n x p`, the
+/// training set), written row-major into `out` (len `m * n`).
+///
+/// Bit-identical to `m` stacked [`dist_row_sq_into`] calls — see the
+/// module docs for the tiling scheme and the determinism contract.
+pub fn dist_matrix_sq_into(xs: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+    if p == 0 {
+        return;
+    }
+    let m = xs.len() / p;
+    let n = rows.len() / p;
+    debug_assert_eq!(xs.len(), m * p);
+    debug_assert_eq!(rows.len(), n * p);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let block = (L1_BLOCK_F64 / p).max(1);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + block).min(n);
+        let mut i0 = 0;
+        while i0 + TILE_M <= m {
+            let a0 = &xs[i0 * p..(i0 + 1) * p];
+            let a1 = &xs[(i0 + 1) * p..(i0 + 2) * p];
+            let a2 = &xs[(i0 + 2) * p..(i0 + 3) * p];
+            let a3 = &xs[(i0 + 3) * p..(i0 + 4) * p];
+            for j in j0..j1 {
+                let d = sq_dist_x4(a0, a1, a2, a3, &rows[j * p..(j + 1) * p]);
+                out[i0 * n + j] = d[0];
+                out[(i0 + 1) * n + j] = d[1];
+                out[(i0 + 2) * n + j] = d[2];
+                out[(i0 + 3) * n + j] = d[3];
+            }
+            i0 += TILE_M;
         }
+        // tail tile of < TILE_M test rows
+        for i in i0..m {
+            let xi = &xs[i * p..(i + 1) * p];
+            for j in j0..j1 {
+                out[i * n + j] = sq_dist(xi, &rows[j * p..(j + 1) * p]);
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// Allocating convenience wrapper over [`dist_matrix_sq_into`].
+pub fn dist_matrix_sq(xs: &[f64], rows: &[f64], p: usize) -> Vec<f64> {
+    let (m, n) = if p == 0 {
+        (0, 0)
+    } else {
+        (xs.len() / p, rows.len() / p)
+    };
+    let mut out = vec![0.0; m * n];
+    dist_matrix_sq_into(xs, rows, p, &mut out);
+    out
+}
+
+/// [`dist_matrix_sq_into`] with the test-row tiles spread over
+/// `workers` scoped threads (the shared-work-list pattern from
+/// `bench_harness::timing::parallel_map`, promoted here).
+///
+/// Each job is a fixed (test-tile, output-tile) pair pulled from a
+/// mutex-guarded iterator, so *which thread* computes a tile never
+/// changes *where or what* it writes: output bytes are identical for
+/// every worker count, including `workers == 1` (which short-circuits
+/// to the serial kernel).
+pub fn dist_matrix_sq_into_workers(
+    xs: &[f64],
+    rows: &[f64],
+    p: usize,
+    workers: usize,
+    out: &mut [f64],
+) {
+    if p == 0 {
+        return;
+    }
+    let m = xs.len() / p;
+    let n = rows.len() / p;
+    if m == 0 || n == 0 {
+        return;
+    }
+    let jobs = m.div_ceil(PAR_TILE_M);
+    let threads = workers.min(jobs);
+    if threads <= 1 {
+        dist_matrix_sq_into(xs, rows, p, out);
+        return;
+    }
+    let queue = Mutex::new(xs.chunks(PAR_TILE_M * p).zip(out.chunks_mut(PAR_TILE_M * n)));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let job = queue.lock().unwrap().next();
+                match job {
+                    Some((xt, ot)) => dist_matrix_sq_into(xt, rows, p, ot),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Full `n x n` squared-distance matrix over the rows of `a` (row-major
+/// output). Exploits symmetry — computes the upper triangle through the
+/// tiled matrix kernel (row tiles against the column suffix) and
+/// mirrors, so every off-diagonal entry is still the exact
+/// `sq_dist(row_i, row_j)` value for `i < j`.
+pub fn pairwise_sq(a: &[f64], p: usize) -> Vec<f64> {
+    let n = if p == 0 { 0 } else { a.len() / p };
+    let mut out = vec![0.0; n * n];
+    let mut buf: Vec<f64> = Vec::new();
+    let mut i0 = 0;
+    while i0 < n {
+        let i1 = (i0 + PAR_TILE_M).min(n);
+        let cols = n - i0;
+        buf.clear();
+        buf.resize((i1 - i0) * cols, 0.0);
+        dist_matrix_sq_into(&a[i0 * p..i1 * p], &a[i0 * p..], p, &mut buf);
+        for i in i0..i1 {
+            let brow = &buf[(i - i0) * cols..(i - i0 + 1) * cols];
+            for j in i + 1..n {
+                let d = brow[j - i0];
+                out[i * n + j] = d;
+                out[j * n + i] = d;
+            }
+        }
+        i0 = i1;
     }
     out
 }
@@ -117,5 +322,91 @@ mod tests {
         assert_eq!(m[1 * 3 + 0], 1.0);
         assert_eq!(m[1 * 3 + 2], 5.0);
         assert_eq!(m[2 * 3 + 1], 5.0);
+    }
+
+    fn fill(seed: u64, len: usize) -> Vec<f64> {
+        let mut s = seed.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s >> 11) as f64 / (1u64 << 53) as f64 - 0.5
+            })
+            .collect()
+    }
+
+    fn stacked_rows(xs: &[f64], rows: &[f64], p: usize) -> Vec<f64> {
+        let m = xs.len() / p;
+        let n = rows.len() / p;
+        let mut want = vec![0.0; m * n];
+        for i in 0..m {
+            dist_row_sq_into(&xs[i * p..(i + 1) * p], rows, p, &mut want[i * n..(i + 1) * n]);
+        }
+        want
+    }
+
+    #[test]
+    fn matrix_bitwise_equals_stacked_rows() {
+        // shapes straddling the TILE_M and L1 block boundaries
+        for (m, n, p) in [
+            (1, 1, 1),
+            (3, 5, 2),
+            (4, 4, 4),
+            (5, 7, 3),
+            (9, 2, 5),
+            (2, 9, 6),
+            (17, 33, 7),
+        ] {
+            let xs = fill(m as u64 * 31 + n as u64, m * p);
+            let rows = fill(n as u64 * 17 + p as u64, n * p);
+            let got = dist_matrix_sq(&xs, &rows, p);
+            let want = stacked_rows(&xs, &rows, p);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "m={m} n={n} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_empty_shapes() {
+        let mut out = vec![];
+        dist_matrix_sq_into(&[], &[1.0, 2.0], 2, &mut out);
+        dist_matrix_sq_into(&[1.0, 2.0], &[], 2, &mut out);
+        assert!(dist_matrix_sq(&[], &[], 3).is_empty());
+    }
+
+    #[test]
+    fn workers_do_not_change_bytes() {
+        let (m, n, p) = (21, 13, 3);
+        let xs = fill(5, m * p);
+        let rows = fill(6, n * p);
+        let serial = dist_matrix_sq(&xs, &rows, p);
+        for workers in [1, 2, 4, 9] {
+            let mut out = vec![0.0; m * n];
+            dist_matrix_sq_into_workers(&xs, &rows, p, workers, &mut out);
+            for (g, w) in out.iter().zip(&serial) {
+                assert_eq!(g.to_bits(), w.to_bits(), "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_matches_naive_double_loop() {
+        let n = 11;
+        let p = 3;
+        let a = fill(42, n * p);
+        let m = pairwise_sq(&a, p);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j {
+                    0.0
+                } else {
+                    sq_dist(&a[i * p..(i + 1) * p], &a[j * p..(j + 1) * p])
+                };
+                assert_eq!(m[i * n + j].to_bits(), want.to_bits());
+            }
+        }
     }
 }

@@ -38,6 +38,36 @@ pub trait DistEngine: Send + Sync {
         }
     }
 
+    /// Full `m x n` squared-distance matrix between the rows of `xs`
+    /// (`m x p`) and the rows of `rows` (`n x p`), row-major into `out`
+    /// (len `m * n`) — one launch per batch instead of one per row.
+    ///
+    /// Default: `m` applications of the row kernel. Overrides must keep
+    /// the determinism contract of `distance::dist_matrix_sq_into`:
+    /// bit-identical to the stacked rows.
+    fn dist_matrix_sq(&self, xs: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        if p == 0 {
+            return;
+        }
+        let n = rows.len() / p;
+        if n == 0 {
+            return;
+        }
+        for (x, o) in xs.chunks_exact(p).zip(out.chunks_exact_mut(n)) {
+            self.dist_row_sq(x, rows, p, o);
+        }
+    }
+
+    /// Gaussian kernel matrix exp(-d^2 / (2 h^2)): [`Self::dist_matrix_sq`]
+    /// followed by the same per-element map as [`Self::kde_row`], so each
+    /// output row is bit-identical to the row kernel.
+    fn kde_matrix(&self, xs: &[f64], rows: &[f64], p: usize, h2: f64, out: &mut [f64]) {
+        self.dist_matrix_sq(xs, rows, p, out);
+        for v in out.iter_mut() {
+            *v = (-*v / (2.0 * h2)).exp();
+        }
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -54,8 +84,39 @@ impl DistEngine for NativeEngine {
         distance::pairwise_sq(a, p)
     }
 
+    fn dist_matrix_sq(&self, xs: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        distance::dist_matrix_sq_into(xs, rows, p, out);
+    }
+
     fn name(&self) -> &'static str {
         "native"
+    }
+}
+
+/// Native loops with the matrix kernel's test-row tiles spread over a
+/// scoped-thread worker pool. Output bytes are identical to
+/// [`NativeEngine`] for every worker count (see
+/// `distance::dist_matrix_sq_into_workers`); only throughput changes.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadedNativeEngine {
+    pub workers: usize,
+}
+
+impl DistEngine for ThreadedNativeEngine {
+    fn dist_row_sq(&self, x: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        distance::dist_row_sq_into(x, rows, p, out);
+    }
+
+    fn pairwise_sq(&self, a: &[f64], p: usize) -> Vec<f64> {
+        distance::pairwise_sq(a, p)
+    }
+
+    fn dist_matrix_sq(&self, xs: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        distance::dist_matrix_sq_into_workers(xs, rows, p, self.workers, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "native-threaded"
     }
 }
 
@@ -65,6 +126,16 @@ pub type Engine = Arc<dyn DistEngine>;
 /// The default (native) engine.
 pub fn native() -> Engine {
     Arc::new(NativeEngine)
+}
+
+/// Native engine with `workers` threads for the batch matrix kernel
+/// (`workers <= 1` returns the plain serial engine).
+pub fn native_with_workers(workers: usize) -> Engine {
+    if workers <= 1 {
+        Arc::new(NativeEngine)
+    } else {
+        Arc::new(ThreadedNativeEngine { workers })
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +157,42 @@ mod tests {
         let via_default = RowOnly.pairwise_sq(&a, 2);
         let via_native = NativeEngine.pairwise_sq(&a, 2);
         assert_eq!(via_default, via_native);
+    }
+
+    #[test]
+    fn default_matrix_matches_native_bitwise() {
+        struct RowOnly;
+        impl DistEngine for RowOnly {
+            fn dist_row_sq(&self, x: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+                distance::dist_row_sq_into(x, rows, p, out);
+            }
+            fn name(&self) -> &'static str {
+                "rowonly"
+            }
+        }
+        let xs: Vec<f64> = (0..15).map(|i| i as f64 * 0.37).collect(); // 5 x 3
+        let rows: Vec<f64> = (0..21).map(|i| 2.1 - i as f64 * 0.11).collect(); // 7 x 3
+        let mut via_default = vec![0.0; 35];
+        let mut via_native = vec![0.0; 35];
+        RowOnly.dist_matrix_sq(&xs, &rows, 3, &mut via_default);
+        NativeEngine.dist_matrix_sq(&xs, &rows, 3, &mut via_native);
+        for (a, b) in via_default.iter().zip(&via_native) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        ThreadedNativeEngine { workers: 2 }.dist_matrix_sq(&xs, &rows, 3, &mut via_default);
+        for (a, b) in via_default.iter().zip(&via_native) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // kde_matrix rows == kde_row, bit for bit
+        let mut km = vec![0.0; 35];
+        NativeEngine.kde_matrix(&xs, &rows, 3, 0.7, &mut km);
+        let mut kr = vec![0.0; 7];
+        for i in 0..5 {
+            NativeEngine.kde_row(&xs[i * 3..(i + 1) * 3], &rows, 3, 0.7, &mut kr);
+            for j in 0..7 {
+                assert_eq!(km[i * 7 + j].to_bits(), kr[j].to_bits());
+            }
+        }
     }
 
     #[test]

@@ -10,8 +10,13 @@ pub mod distance;
 pub mod engine;
 pub mod select;
 
-pub use distance::{dist_row_sq, pairwise_sq, Backend};
-pub use engine::{native, DistEngine, Engine, NativeEngine};
+pub use distance::{
+    dist_matrix_sq, dist_matrix_sq_into, dist_matrix_sq_into_workers, dist_row_sq,
+    dist_row_sq_into, pairwise_sq, Backend,
+};
+pub use engine::{
+    native, native_with_workers, DistEngine, Engine, NativeEngine, ThreadedNativeEngine,
+};
 pub use select::{k_smallest, k_smallest_by};
 
 /// Row-major dense matrix.
@@ -199,6 +204,33 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// All row-by-row dot products between `a` (`m x q`) and `b` (`n x q`):
+/// row-major `m x n` output with `out[i, j] = dot(a.row(i), b.row(j))`.
+///
+/// The batch analogue of calling [`dot`] in a loop (LS-SVM projection
+/// assembly): each entry replays [`dot`]'s exact operation sequence, so
+/// the result is bit-identical to the per-row path, and the `b` rows
+/// are walked innermost in blocks so they stay cache-hot across the
+/// `a` tile — same scheme as `distance::dist_matrix_sq_into`.
+pub fn dot_matrix(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols);
+    let mut out = Mat::zeros(a.rows, b.rows);
+    let block = (3072 / a.cols.max(1)).max(1);
+    let mut j0 = 0;
+    while j0 < b.rows {
+        let j1 = (j0 + block).min(b.rows);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let orow = out.row_mut(i);
+            for j in j0..j1 {
+                orow[j] = dot(arow, b.row(j));
+            }
+        }
+        j0 = j1;
+    }
+    out
+}
+
 /// Cholesky factorization of an SPD matrix: returns lower-triangular L
 /// with `A = L L^T`, or None if not positive definite.
 pub fn cholesky(a: &Mat) -> Option<Mat> {
@@ -368,6 +400,18 @@ mod tests {
             for j in 0..5 {
                 let want = m0[(i, j)] + 0.5 * u[i] * v[j];
                 assert!((m[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matrix_bitwise_equals_per_row_dot() {
+        let a = rand_mat(9, 5, 11);
+        let b = rand_mat(6, 5, 12);
+        let m = dot_matrix(&a, &b);
+        for i in 0..9 {
+            for j in 0..6 {
+                assert_eq!(m[(i, j)].to_bits(), dot(a.row(i), b.row(j)).to_bits());
             }
         }
     }

@@ -171,7 +171,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(|s| s.to_string())
         .unwrap_or_else(|| cfg.serve.addr.clone());
 
-    let engine = select_engine(cfg.use_pjrt, &cfg.artifacts_dir);
+    let engine =
+        select_engine(cfg.use_pjrt, &cfg.artifacts_dir, cfg.serve.dist_workers);
     let ds = make_classification(
         &ClassificationSpec {
             n_samples: n,
@@ -235,7 +236,8 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let kind: MeasureKind = args.get("measure").unwrap_or("simplified-knn").parse()?;
     let n: usize = args.get("n").map(|v| v.parse()).transpose()?.unwrap_or(500);
     let eps: f64 = args.get("eps").map(|v| v.parse()).transpose()?.unwrap_or(0.1);
-    let engine = select_engine(cfg.use_pjrt, &cfg.artifacts_dir);
+    let engine =
+        select_engine(cfg.use_pjrt, &cfg.artifacts_dir, cfg.serve.dist_workers);
 
     let ds = make_classification(
         &ClassificationSpec {

@@ -133,11 +133,12 @@ impl CpMeasure for KdeStandard {
 
     /// Batched standard KDE. The per-pair path recomputes every
     /// training point's kernel row per (x, y) pair; this override
-    /// computes the n training rows (and their label-restricted
-    /// preliminary sums) once per batch and the m test rows once per
-    /// object. The preliminary sums accumulate in the same j-order as
-    /// the per-pair loop, so all scores are bit-identical to per-pair
-    /// [`CpMeasure::scores`].
+    /// issues exactly two kernel-matrix launches per batch: one
+    /// `m x n` matrix for the test rows and one `n x n` matrix for the
+    /// training rows' label-restricted preliminary sums. The
+    /// preliminary sums accumulate in the same j-order as the per-pair
+    /// loop and the matrix entries replay the row kernel exactly, so
+    /// all scores are bit-identical to per-pair [`CpMeasure::scores`].
     fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
         let ds = self.ds.as_ref().expect("fit first");
         let n = ds.n();
@@ -147,18 +148,29 @@ impl CpMeasure for KdeStandard {
         if xs.is_empty() || labels.is_empty() {
             return Vec::new();
         }
-        // kernel row per test object, shared across labels
-        let mut k_tests = Vec::with_capacity(xs.len());
-        for x in xs {
-            let mut k_test = vec![0.0; n];
-            self.engine.kde_row(x, &ds.x, ds.p, h2, &mut k_test);
-            k_tests.push(k_test);
+        if n == 0 {
+            let score = Scores {
+                train: Vec::new(),
+                test: kde_alpha(0.0, 0, scale),
+            };
+            return vec![score; xs.len() * labels.len()];
         }
-        // per-training-point preliminary sums, one k_i row per batch
+        // one m x n kernel-matrix launch for every test object's row
+        let mut xs_flat = Vec::with_capacity(xs.len() * ds.p);
+        for x in xs {
+            xs_flat.extend_from_slice(x);
+        }
+        let mut k_tests = vec![0.0; xs.len() * n];
+        self.engine.kde_matrix(&xs_flat, &ds.x, ds.p, h2, &mut k_tests);
+        // per-training-point preliminary sums from one n x n launch
+        // (the standard baseline is O(n^2) work regardless)
+        let k_train_matrix = {
+            let mut k = vec![0.0; n * n];
+            self.engine.kde_matrix(&ds.x, &ds.x, ds.p, h2, &mut k);
+            k
+        };
         let mut prelim = vec![0.0; n];
-        let mut k_i = vec![0.0; n];
-        for i in 0..n {
-            self.engine.kde_row(ds.row(i), &ds.x, ds.p, h2, &mut k_i);
+        for (i, k_i) in k_train_matrix.chunks_exact(n).enumerate() {
             let mut s = 0.0;
             for j in 0..n {
                 if j != i && ds.y[j] == ds.y[i] {
@@ -168,7 +180,7 @@ impl CpMeasure for KdeStandard {
             prelim[i] = s;
         }
         let mut out = Vec::with_capacity(xs.len() * labels.len());
-        for k_test in &k_tests {
+        for k_test in k_tests.chunks_exact(n) {
             for &y in labels {
                 let mut train = Vec::with_capacity(n);
                 for i in 0..n {
@@ -298,20 +310,37 @@ impl CpMeasure for KdeOptimized {
         self.scores_from_krow(&k_test, y)
     }
 
-    /// Batched optimized KDE: each test object's Gaussian kernel row is
-    /// computed ONCE and reused across every candidate label's §4.1
-    /// preliminary-score update. Bit-identical to per-pair
-    /// [`CpMeasure::scores`]: both paths share
+    /// Batched optimized KDE: ONE `m x n` kernel-matrix launch computes
+    /// every test object's Gaussian kernel row, each reused across
+    /// every candidate label's §4.1 preliminary-score update.
+    /// Bit-identical to per-pair [`CpMeasure::scores`]: the matrix
+    /// entries replay the row kernel exactly and both paths share
     /// [`Self::scores_from_krow`].
     fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
         let ds = self.ds.as_ref().expect("fit first");
+        let n = ds.n();
         let h2 = self.h * self.h;
+        if xs.is_empty() || labels.is_empty() {
+            return Vec::new();
+        }
         let mut out = Vec::with_capacity(xs.len() * labels.len());
-        let mut k_test = vec![0.0; ds.n()];
+        if n == 0 {
+            for _ in xs {
+                for &y in labels {
+                    out.push(self.scores_from_krow(&[], y));
+                }
+            }
+            return out;
+        }
+        let mut xs_flat = Vec::with_capacity(xs.len() * ds.p);
         for x in xs {
-            self.engine.kde_row(x, &ds.x, ds.p, h2, &mut k_test);
+            xs_flat.extend_from_slice(x);
+        }
+        let mut k_tests = vec![0.0; xs.len() * n];
+        self.engine.kde_matrix(&xs_flat, &ds.x, ds.p, h2, &mut k_tests);
+        for k_test in k_tests.chunks_exact(n) {
             for &y in labels {
-                out.push(self.scores_from_krow(&k_test, y));
+                out.push(self.scores_from_krow(k_test, y));
             }
         }
         out

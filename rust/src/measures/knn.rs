@@ -183,11 +183,12 @@ impl CpMeasure for KnnStandard {
 
     /// Batched standard scoring. The per-pair path recomputes every
     /// training point's distance row for every (x, y) pair — m·l·(n+1)
-    /// O(n p) rows for an m-object, l-label batch; this override
-    /// computes the n training rows once per batch and the m test rows
-    /// once per object (n + m rows total), reusing them across all
+    /// O(n p) rows for an m-object, l-label batch; this override issues
+    /// exactly two matrix launches per batch: one `m x n` test matrix
+    /// and one `n x n` pairwise training matrix, reused across all
     /// pairs. Scores are bit-identical to per-pair [`CpMeasure::scores`]
-    /// because every `measure_on_bag` call receives the same inputs.
+    /// because the tiled kernel's entries replay `sq_dist` exactly, so
+    /// every `measure_on_bag` call receives the same inputs.
     fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
         let ds = self.ds();
         let n = ds.n();
@@ -195,19 +196,31 @@ impl CpMeasure for KnnStandard {
         if xs.is_empty() || labels.is_empty() {
             return Vec::new();
         }
-        // one distance row per test object, shared across labels
-        let mut d_tests = Vec::with_capacity(xs.len());
-        for x in xs {
-            let mut d_test = vec![0.0; n];
-            self.engine.dist_row_sq(x, &ds.x, p, &mut d_test);
-            for v in d_test.iter_mut() {
-                *v = v.sqrt();
+        if n == 0 {
+            let mut out = Vec::with_capacity(xs.len() * labels.len());
+            for _ in xs {
+                for &y in labels {
+                    out.push(Scores {
+                        train: Vec::new(),
+                        test: self.measure_on_bag(&[], &ds.y, None, y, None),
+                    });
+                }
             }
-            d_tests.push(d_test);
+            return out;
+        }
+        // one m x n matrix launch covers every test object's distance row
+        let mut xs_flat = Vec::with_capacity(xs.len() * p);
+        for x in xs {
+            xs_flat.extend_from_slice(x);
+        }
+        let mut d_tests = vec![0.0; xs.len() * n];
+        self.engine.dist_matrix_sq(&xs_flat, &ds.x, p, &mut d_tests);
+        for v in d_tests.iter_mut() {
+            *v = v.sqrt();
         }
         // test scores up front; train slots filled by the i-sweep below
         let mut out = Vec::with_capacity(xs.len() * labels.len());
-        for d_test in &d_tests {
+        for d_test in d_tests.chunks_exact(n) {
             for &y in labels {
                 out.push(Scores {
                     train: vec![0.0; n],
@@ -215,19 +228,20 @@ impl CpMeasure for KnnStandard {
                 });
             }
         }
-        // each training point's distance row, computed once and reused
+        // every training point's distance row in one n x n launch (the
+        // standard baseline is O(n^2) work regardless; materializing the
+        // matrix trades O(n^2) memory for one launch per batch), reused
         // across every (test object, label) pair
-        let mut d_i = vec![0.0; n];
-        for i in 0..n {
-            self.engine.dist_row_sq(ds.row(i), &ds.x, p, &mut d_i);
-            for v in d_i.iter_mut() {
-                *v = v.sqrt();
-            }
-            for (xi, d_test) in d_tests.iter().enumerate() {
+        let mut d_train = self.engine.pairwise_sq(&ds.x, p);
+        for v in d_train.iter_mut() {
+            *v = v.sqrt();
+        }
+        for (i, d_i) in d_train.chunks_exact(n).enumerate() {
+            for (xi, d_test) in d_tests.chunks_exact(n).enumerate() {
                 for (li, &y) in labels.iter().enumerate() {
                     out[xi * labels.len() + li].train[i] = self
                         .measure_on_bag(
-                            &d_i,
+                            d_i,
                             &ds.y,
                             Some(i),
                             ds.y[i],
@@ -413,22 +427,40 @@ impl CpMeasure for KnnOptimized {
         self.scores_from_row(&d, y)
     }
 
-    /// One `scores_batch` over `xs × labels`: each test object's
-    /// distance row is computed ONCE and reused across every candidate
-    /// label's provisional-score sweep (vs once per (x, y) pair in the
-    /// per-pair path). Bit-identical to per-pair [`CpMeasure::scores`]
-    /// by construction: both paths share [`Self::scores_from_row`].
+    /// One `scores_batch` over `xs × labels`: ONE `m x n` matrix launch
+    /// computes every test object's distance row, each reused across
+    /// every candidate label's provisional-score sweep (vs one row
+    /// kernel per (x, y) pair in the per-pair path). Bit-identical to
+    /// per-pair [`CpMeasure::scores`] by construction: the tiled kernel
+    /// replays `sq_dist` per entry and both paths share
+    /// [`Self::scores_from_row`].
     fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
         let ds = self.ds();
+        let n = ds.n();
+        if xs.is_empty() || labels.is_empty() {
+            return Vec::new();
+        }
         let mut out = Vec::with_capacity(xs.len() * labels.len());
-        let mut d = vec![0.0; ds.n()];
-        for x in xs {
-            self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d);
-            for v in d.iter_mut() {
-                *v = v.sqrt();
+        if n == 0 {
+            for _ in xs {
+                for &y in labels {
+                    out.push(self.scores_from_row(&[], y));
+                }
             }
+            return out;
+        }
+        let mut xs_flat = Vec::with_capacity(xs.len() * ds.p);
+        for x in xs {
+            xs_flat.extend_from_slice(x);
+        }
+        let mut d = vec![0.0; xs.len() * n];
+        self.engine.dist_matrix_sq(&xs_flat, &ds.x, ds.p, &mut d);
+        for v in d.iter_mut() {
+            *v = v.sqrt();
+        }
+        for row in d.chunks_exact(n) {
             for &y in labels {
-                out.push(self.scores_from_row(&d, y));
+                out.push(self.scores_from_row(row, y));
             }
         }
         out

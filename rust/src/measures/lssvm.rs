@@ -402,6 +402,52 @@ impl LsSvmOptimized {
         }
     }
 
+    /// Batched [`Self::prepare_test`]: the whole batch's label-independent
+    /// state from three matrix launches instead of 3m vector launches —
+    /// `U = Px C - Px` (one `m x q` [`linalg::dot_matrix`]; IEEE multiply
+    /// commutes bitwise, so `dot(phix, c_row) == dot(c_row, phix)` and
+    /// each row equals `prepare_test`'s `C phix - phix` exactly),
+    /// `wdots = Px w` (one matvec), and `B = U Phi^T` (one `m x n`
+    /// dot-matrix: the per-point projections `b_i`). Every scalar is the
+    /// same operation sequence as `prepare_test`, so the prepared states
+    /// are bit-identical.
+    fn prepare_tests(&self, xs: &[&[f64]]) -> Vec<PreparedTest> {
+        let phi = self.phi.as_ref().expect("fit first");
+        let built = self.built.as_ref().unwrap();
+        let model = self.model.as_ref().unwrap();
+        let q = phi.cols;
+        let mut px = Mat::zeros(xs.len(), q);
+        let mut buf = Vec::with_capacity(q);
+        for (r, x) in xs.iter().enumerate() {
+            built.apply(x, &mut buf);
+            px.row_mut(r).copy_from_slice(&buf);
+        }
+        let mut u_mat = linalg::dot_matrix(&px, &model.c);
+        for r in 0..xs.len() {
+            let (urow, prow) = (u_mat.row_mut(r), &px.data[r * q..(r + 1) * q]);
+            for (ui, &pi) in urow.iter_mut().zip(prow) {
+                *ui -= pi;
+            }
+        }
+        let wdots = px.matvec(&model.w);
+        let b_mat = linalg::dot_matrix(&u_mat, phi);
+        (0..xs.len())
+            .map(|r| {
+                let phix = px.row(r);
+                let u = u_mat.row(r).to_vec();
+                let ptp_t = dot(phix, phix);
+                let ptcp_t = dot(phix, &u) + ptp_t;
+                let denom_t = ptp_t + self.rho - ptcp_t;
+                PreparedTest {
+                    u,
+                    denom_t,
+                    wdot: wdots[r],
+                    bs: b_mat.row(r).to_vec(),
+                }
+            })
+            .collect()
+    }
+
     /// The per-label half of `scores`: one O(q^2) w_aug construction
     /// plus the O(q)-per-point LOO sweep (see the struct docs for the
     /// scalar-cache algebra). Shared by `scores` and `scores_batch`, so
@@ -481,16 +527,19 @@ impl CpMeasure for LsSvmOptimized {
         self.scores_from_prepared(&self.prepare_test(x), y)
     }
 
-    /// Batched LS-SVM scoring: the O(q p) feature map, the O(q^2)
-    /// C-matvec of the rank-1 test-point update, and the O(n q)
-    /// projections b_i are computed ONCE per test object and reused
-    /// across every candidate label; only the O(n q) virtual-decrement
-    /// sweep runs per label. Bit-identical to per-pair
-    /// [`CpMeasure::scores`] (shared [`Self::scores_from_prepared`]).
+    /// Batched LS-SVM scoring: all label-independent state for the
+    /// whole batch — the rank-1 update vectors `U` and the per-point
+    /// projection matrix `B` — comes from [`Self::prepare_tests`]'s
+    /// three matrix launches, reused across every candidate label; only
+    /// the O(n q) virtual-decrement sweep runs per label. Bit-identical
+    /// to per-pair [`CpMeasure::scores`] (bit-equal prepared states +
+    /// shared [`Self::scores_from_prepared`]).
     fn scores_batch(&self, xs: &[&[f64]], labels: &[Label]) -> Vec<Scores> {
+        if xs.is_empty() || labels.is_empty() {
+            return Vec::new();
+        }
         let mut out = Vec::with_capacity(xs.len() * labels.len());
-        for x in xs {
-            let st = self.prepare_test(x);
+        for st in self.prepare_tests(xs) {
             for &y in labels {
                 out.push(self.scores_from_prepared(&st, y));
             }

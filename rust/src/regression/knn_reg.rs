@@ -138,19 +138,18 @@ impl KnnRegressorStandard {
 
     /// Recompute every training point's neighbour statistics — the
     /// O(n^2) term the optimized variant precomputes at fit time. It is
-    /// test-independent, so the batch path runs it once per batch.
+    /// test-independent, so the batch path runs it once per batch, and
+    /// the distance work is one n x n pairwise matrix launch (entries
+    /// bit-identical to the per-row kernel).
     fn all_stats(&self, ds: &RegressionDataset) -> Vec<NnStats> {
         let n = ds.n();
-        let mut stats = Vec::with_capacity(n);
-        let mut d_i = vec![0.0; n];
-        for i in 0..n {
-            self.engine.dist_row_sq(ds.row(i), &ds.x, ds.p, &mut d_i);
-            for v in d_i.iter_mut() {
-                *v = v.sqrt();
-            }
-            stats.push(nn_stats(&d_i, &ds.y, i, self.k));
+        let mut d = self.engine.pairwise_sq(&ds.x, ds.p);
+        for v in d.iter_mut() {
+            *v = v.sqrt();
         }
-        stats
+        (0..n)
+            .map(|i| nn_stats(&d[i * n..(i + 1) * n], &ds.y, i, self.k))
+            .collect()
     }
 
     /// Affine coefficients for one test object — O(n^2) neighbour
@@ -167,24 +166,28 @@ impl KnnRegressorStandard {
     }
 
     /// Batched coefficients: the O(n^2) neighbour-statistics pass is
-    /// shared across the whole batch, so the per-object cost drops to
-    /// one distance row + assembly. Bit-identical to per-object
-    /// [`coefficients`](Self::coefficients) (same helpers, same order).
+    /// shared across the whole batch and all test distance rows come
+    /// from ONE m x n matrix launch. Bit-identical to per-object
+    /// [`coefficients`](Self::coefficients) (matrix entries replay the
+    /// row kernel; same helpers, same order).
     pub fn coefficients_batch(&self, xs: &[&[f64]]) -> Vec<Coefficients> {
         if xs.is_empty() {
             return Vec::new();
         }
         let ds = self.ds.as_ref().expect("fit first");
+        let n = ds.n();
         let stats = self.all_stats(ds);
-        let mut d_test = vec![0.0; ds.n()];
-        xs.iter()
-            .map(|&x| {
-                self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d_test);
-                for v in d_test.iter_mut() {
-                    *v = v.sqrt();
-                }
-                coefficients(&stats, &d_test, ds, self.k)
-            })
+        let mut xs_flat = Vec::with_capacity(xs.len() * ds.p);
+        for x in xs {
+            xs_flat.extend_from_slice(x);
+        }
+        let mut d_tests = vec![0.0; xs.len() * n];
+        self.engine.dist_matrix_sq(&xs_flat, &ds.x, ds.p, &mut d_tests);
+        for v in d_tests.iter_mut() {
+            *v = v.sqrt();
+        }
+        (0..xs.len())
+            .map(|r| coefficients(&stats, &d_tests[r * n..(r + 1) * n], ds, self.k))
             .collect()
     }
 
@@ -308,22 +311,28 @@ impl KnnRegressorOptimized {
     }
 
     /// Batched coefficients: statistics are already precomputed, so the
-    /// batch path just reuses one distance-row buffer across objects.
-    /// Bit-identical to per-object
-    /// [`coefficients`](Self::coefficients).
+    /// batch path is ONE m x n distance-matrix launch plus per-object
+    /// assembly. Bit-identical to per-object
+    /// [`coefficients`](Self::coefficients) (matrix entries replay the
+    /// row kernel exactly).
     pub fn coefficients_batch(&self, xs: &[&[f64]]) -> Vec<Coefficients> {
         if xs.is_empty() {
             return Vec::new();
         }
         let ds = self.ds.as_ref().expect("fit first");
-        let mut d_test = vec![0.0; ds.n()];
-        xs.iter()
-            .map(|&x| {
-                self.engine.dist_row_sq(x, &ds.x, ds.p, &mut d_test);
-                for v in d_test.iter_mut() {
-                    *v = v.sqrt();
-                }
-                coefficients(&self.stats, &d_test, ds, self.k)
+        let n = ds.n();
+        let mut xs_flat = Vec::with_capacity(xs.len() * ds.p);
+        for x in xs {
+            xs_flat.extend_from_slice(x);
+        }
+        let mut d_tests = vec![0.0; xs.len() * n];
+        self.engine.dist_matrix_sq(&xs_flat, &ds.x, ds.p, &mut d_tests);
+        for v in d_tests.iter_mut() {
+            *v = v.sqrt();
+        }
+        (0..xs.len())
+            .map(|r| {
+                coefficients(&self.stats, &d_tests[r * n..(r + 1) * n], ds, self.k)
             })
             .collect()
     }

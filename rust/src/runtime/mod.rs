@@ -30,4 +30,4 @@ mod stub;
 #[cfg(not(feature = "pjrt"))]
 pub use stub::{PjrtEngine, PjrtRuntime};
 
-pub use registry::{Manifest, ROW_BUCKETS};
+pub use registry::{Manifest, M_BUCKETS, ROW_BUCKETS};

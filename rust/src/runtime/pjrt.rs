@@ -145,6 +145,30 @@ impl PjrtRuntime {
         Ok(out[..n].iter().map(|&v| v as f64).collect())
     }
 
+    /// Full m x n squared-distance matrix via the `dist_matrix_*`
+    /// Pallas artifact (one launch per test batch). Returns the
+    /// unpadded m x n row-major matrix.
+    pub fn dist_matrix_sq_f32(
+        &self,
+        xs: &[f64],
+        rows: &[f64],
+        p: usize,
+    ) -> Result<Vec<f64>> {
+        let m = xs.len() / p;
+        let n = rows.len() / p;
+        let (n_pad, p_pad) = self.manifest.bucket(n, p)?;
+        let m_pad = self.manifest.bucket_m(m)?;
+        let name = format!("dist_matrix_m{m_pad}_n{n_pad}_p{p_pad}");
+        let a_lit = pad_literal(xs, m, p, m_pad, p_pad)?;
+        let b_lit = pad_literal(rows, n, p, n_pad, p_pad)?;
+        let out = self.run(&name, &[a_lit, b_lit])?;
+        let mut res = Vec::with_capacity(m * n);
+        for i in 0..m {
+            res.extend(out[i * n_pad..i * n_pad + n].iter().map(|&v| v as f64));
+        }
+        Ok(res)
+    }
+
     /// Fused Simplified-k-NN score update (§3.1) in one PJRT call.
     #[allow(clippy::too_many_arguments)]
     pub fn knn_update_f32(
@@ -235,6 +259,18 @@ impl DistEngine for PjrtEngine {
                 for v in out.iter_mut() {
                     *v = (-*v / (2.0 * h2)).exp();
                 }
+            }
+        }
+    }
+
+    fn dist_matrix_sq(&self, xs: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        if p == 0 || xs.is_empty() || rows.is_empty() {
+            return;
+        }
+        match self.rt.dist_matrix_sq_f32(xs, rows, p) {
+            Ok(v) => out.copy_from_slice(&v),
+            Err(_) => {
+                crate::linalg::distance::dist_matrix_sq_into(xs, rows, p, out)
             }
         }
     }

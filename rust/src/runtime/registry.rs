@@ -15,6 +15,9 @@ use crate::util::json::Json;
 pub const ROW_BUCKETS: [usize; 4] = [256, 1024, 4096, 16384];
 /// Feature-dim buckets compiled by aot.py (ascending).
 pub const P_BUCKETS: [usize; 2] = [32, 784];
+/// Test-batch row buckets for the `dist_matrix_*` artifacts (ascending;
+/// multiples of the 128 Pallas tile).
+pub const M_BUCKETS: [usize; 2] = [128, 512];
 
 /// One artifact's metadata.
 #[derive(Clone, Debug)]
@@ -80,6 +83,15 @@ impl Manifest {
         self.artifacts.is_empty()
     }
 
+    /// Smallest test-batch bucket covering `m` rows, if any.
+    pub fn bucket_m(&self, m: usize) -> Result<usize> {
+        M_BUCKETS
+            .iter()
+            .copied()
+            .find(|&b| m <= b)
+            .with_context(|| format!("batch size {m} exceeds every bucket"))
+    }
+
     /// Smallest compiled bucket covering (n, p), if any.
     pub fn bucket(&self, n: usize, p: usize) -> Result<(usize, usize)> {
         let p_pad = P_BUCKETS
@@ -121,6 +133,15 @@ mod tests {
         );
         let a = &m.artifacts["dist_row_n256_p32"];
         assert_eq!(a.arg_shapes, vec![vec![1, 32], vec![256, 32]]);
+    }
+
+    #[test]
+    fn bucket_m_selection() {
+        let m = Manifest::default();
+        assert_eq!(m.bucket_m(1).unwrap(), 128);
+        assert_eq!(m.bucket_m(128).unwrap(), 128);
+        assert_eq!(m.bucket_m(129).unwrap(), 512);
+        assert!(m.bucket_m(513).is_err());
     }
 
     #[test]

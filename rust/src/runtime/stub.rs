@@ -57,6 +57,15 @@ impl PjrtRuntime {
         bail!("PJRT support not compiled in")
     }
 
+    pub fn dist_matrix_sq_f32(
+        &self,
+        _xs: &[f64],
+        _rows: &[f64],
+        _p: usize,
+    ) -> Result<Vec<f64>> {
+        bail!("PJRT support not compiled in")
+    }
+
     pub fn knn_update_f32(
         &self,
         _x: &[f64],
@@ -84,6 +93,10 @@ impl PjrtEngine {
 impl DistEngine for PjrtEngine {
     fn dist_row_sq(&self, x: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
         crate::linalg::distance::dist_row_sq_into(x, rows, p, out);
+    }
+
+    fn dist_matrix_sq(&self, xs: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        crate::linalg::distance::dist_matrix_sq_into(xs, rows, p, out);
     }
 
     fn name(&self) -> &'static str {

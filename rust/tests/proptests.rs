@@ -523,6 +523,105 @@ fn prop_regression_batch_equals_per_object_bitwise() {
     });
 }
 
+fn gaussian_flat(rng: &mut Rng, len: usize) -> Vec<f64> {
+    (0..len).map(|_| rng.normal() * 3.0).collect()
+}
+
+/// Reference path: one `dist_row_sq_into` call per test row, stacked.
+fn stacked_rows(xs: &[f64], rows: &[f64], p: usize) -> Vec<f64> {
+    let (m, n) = (xs.len() / p, rows.len() / p);
+    let mut out = vec![0.0; m * n];
+    for (x, o) in xs.chunks_exact(p).zip(out.chunks_exact_mut(n)) {
+        exact_cp::linalg::dist_row_sq_into(x, rows, p, o);
+    }
+    out
+}
+
+fn bits_equal(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn prop_dist_matrix_equals_stacked_rows_bitwise() {
+    // THE tiled-kernel contract: the m x n matrix path replays the
+    // per-row op order exactly, so every entry is bit-identical to the
+    // stacked dist_row_sq_into reference — on random shapes AND the
+    // named edge shapes (empty batch, single row, odd p, m >> n, n >> m).
+    check("dist-matrix-vs-rows", 30, |c| {
+        let mut rng = Rng::seed_from(c.seed);
+        let (m, p) = (c.k, c.p); // reuse the case's k as the batch size
+        let xs = gaussian_flat(&mut rng, m * p);
+        let rows = gaussian_flat(&mut rng, c.n * p);
+        let mut got = vec![0.0; m * c.n];
+        exact_cp::linalg::dist_matrix_sq_into(&xs, &rows, p, &mut got);
+        bits_equal(&got, &stacked_rows(&xs, &rows, p))
+    });
+    let mut rng = Rng::seed_from(0xD157);
+    for (m, n, p) in [
+        (0, 12, 3),   // empty test batch
+        (5, 0, 3),    // empty training set
+        (1, 17, 5),   // single test row
+        (3, 9, 1),    // p = 1 (pure scalar tail)
+        (7, 11, 3),   // odd everything
+        (64, 2, 5),   // m >> n
+        (2, 300, 5),  // n >> m (multiple L1 blocks at larger p)
+        (9, 700, 3),  // tail rows + several training blocks
+    ] {
+        let xs = gaussian_flat(&mut rng, m * p);
+        let rows = gaussian_flat(&mut rng, n * p);
+        let mut got = vec![0.0; m * n];
+        exact_cp::linalg::dist_matrix_sq_into(&xs, &rows, p, &mut got);
+        assert!(
+            bits_equal(&got, &stacked_rows(&xs, &rows, p)),
+            "edge shape m={m} n={n} p={p}"
+        );
+    }
+}
+
+#[test]
+fn prop_dist_matrix_workers_identical_bytes() {
+    // determinism contract: the scoped-parallel path partitions output
+    // tiles but never changes a value, so bytes match the serial kernel
+    // for every worker count
+    check("dist-matrix-workers", 20, |c| {
+        let mut rng = Rng::seed_from(c.seed ^ 0x50_CA1);
+        let (m, p) = (c.k + 7, c.p); // span multiple PAR_TILE_M jobs
+        let xs = gaussian_flat(&mut rng, m * p);
+        let rows = gaussian_flat(&mut rng, c.n * p);
+        let mut serial = vec![0.0; m * c.n];
+        exact_cp::linalg::dist_matrix_sq_into(&xs, &rows, p, &mut serial);
+        [1usize, 2, 4].into_iter().all(|w| {
+            let mut par = vec![0.0; m * c.n];
+            exact_cp::linalg::dist_matrix_sq_into_workers(
+                &xs, &rows, p, w, &mut par,
+            );
+            bits_equal(&par, &serial)
+        })
+    });
+}
+
+#[test]
+fn prop_pairwise_sq_matches_matrix_kernel() {
+    // pairwise_sq rides the tiled kernel and mirrors the upper triangle;
+    // it must stay bitwise-consistent with the full-matrix path and keep
+    // an exactly-zero diagonal
+    check("pairwise-vs-matrix", 20, |c| {
+        let mut rng = Rng::seed_from(c.seed + 13);
+        let a = gaussian_flat(&mut rng, c.n * c.p);
+        let got = exact_cp::linalg::pairwise_sq(&a, c.p);
+        let full = exact_cp::linalg::dist_matrix_sq(&a, &a, c.p);
+        (0..c.n).all(|i| {
+            got[i * c.n + i].to_bits() == 0.0f64.to_bits()
+                && (0..c.n).all(|j| {
+                    i == j
+                        || got[i * c.n + j].to_bits()
+                            == full[i * c.n + j].to_bits()
+                })
+        })
+    });
+}
+
 #[test]
 fn prop_region_sweep_equals_direct_pvalue() {
     // conformal_region == pointwise p_value_at thresholding, on random
