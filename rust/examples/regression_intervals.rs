@@ -69,10 +69,25 @@ fn main() {
         t0.elapsed(),
         t0.elapsed() / test.n() as u32
     );
-    println!("method       coverage (target >= {:.0}%)   mean width", (1.0 - eps) * 100.0);
-    println!("  knn-cp     {:>5.1}%                      {:>8.1}", 100.0 * cov_knn as f64 / n, w_knn / n);
-    println!("  ridge-cp   {:>5.1}%                      {:>8.1}", 100.0 * cov_ridge as f64 / n, w_ridge / n);
-    println!("  knn-icp    {:>5.1}%                      {:>8.1}", 100.0 * cov_icp as f64 / n, w_icp / n);
+    println!(
+        "method       coverage (target >= {:.0}%)   mean width",
+        (1.0 - eps) * 100.0
+    );
+    println!(
+        "  knn-cp     {:>5.1}%                      {:>8.1}",
+        100.0 * cov_knn as f64 / n,
+        w_knn / n
+    );
+    println!(
+        "  ridge-cp   {:>5.1}%                      {:>8.1}",
+        100.0 * cov_ridge as f64 / n,
+        w_ridge / n
+    );
+    println!(
+        "  knn-icp    {:>5.1}%                      {:>8.1}",
+        100.0 * cov_icp as f64 / n,
+        w_icp / n
+    );
 
     // exactness vs the Papadopoulos-2011 reference on a small subset
     let (small, _) = train.split(150, &mut rng);

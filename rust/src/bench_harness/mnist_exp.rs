@@ -121,7 +121,14 @@ pub fn run_fuzziness(cfg: &Config) -> Result<Report> {
     let mut report = Report::new(
         "fuzziness",
         "statistical efficiency on MNIST-like data: fuzziness (lower = better), Welch H0 'ICP <= CP'",
-        &["measure", "cp_fuzziness", "icp_fuzziness", "welch_t", "welch_p", "cp_wins_significant"],
+        &[
+            "measure",
+            "cp_fuzziness",
+            "icp_fuzziness",
+            "welch_t",
+            "welch_p",
+            "cp_wins_significant",
+        ],
     );
 
     let cells: Vec<(MeasureKind, usize, String)> = vec![

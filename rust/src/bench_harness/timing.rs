@@ -100,6 +100,8 @@ pub fn parallel_map<R: Send>(
     let counter = AtomicUsize::new(0);
     let out: Mutex<Vec<Option<R>>> =
         Mutex::new((0..n).map(|_| None).collect());
+    // THREADS: scoped workers joined at scope exit; the atomic counter
+    // hands each index to exactly one worker.
     std::thread::scope(|scope| {
         for _ in 0..threads.max(1) {
             scope.spawn(|| loop {
@@ -108,6 +110,8 @@ pub fn parallel_map<R: Send>(
                     break;
                 }
                 let r = f(i);
+                // LOCK-ORDER: bench.result_slots — innermost, one slot
+                // store per acquisition; `f` runs outside the lock.
                 out.lock().unwrap()[i] = Some(r);
             });
         }

@@ -49,6 +49,8 @@ impl<T> Batcher<T> {
 
     /// Enqueue one item (non-blocking; backpressure via `PushError::Full`).
     pub fn push(&self, item: T) -> Result<(), PushError> {
+        // LOCK-ORDER: batcher.queue — innermost lock on the producer
+        // side; held only for the push, dropped before notify.
         let mut st = self.q.lock().unwrap();
         if st.closed {
             return Err(PushError::Closed);
@@ -66,12 +68,15 @@ impl<T> Batcher<T> {
     /// drain up to `max_batch`, waiting `max_wait` for the batch to fill.
     /// Returns None when closed and drained.
     pub fn next_batch(&self) -> Option<Vec<T>> {
+        // LOCK-ORDER: batcher.queue — consumer drain; no other lock is
+        // ever taken while this one is held.
         let mut st = self.q.lock().unwrap();
         // wait for the first item
         while st.items.is_empty() {
             if st.closed {
                 return None;
             }
+            // LOCK-ORDER: batcher.queue — condvar wait reacquires it.
             st = self.cv.wait(st).unwrap();
         }
         // give stragglers a chance to fill the batch
@@ -81,6 +86,7 @@ impl<T> Batcher<T> {
             if now >= deadline {
                 break;
             }
+            // LOCK-ORDER: batcher.queue — timed condvar wait reacquires.
             let (g, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
             st = g;
             if timeout.timed_out() {
@@ -93,11 +99,13 @@ impl<T> Batcher<T> {
 
     /// Current depth (diagnostics).
     pub fn depth(&self) -> usize {
+        // LOCK-ORDER: batcher.queue — read-only peek for metrics.
         self.q.lock().unwrap().items.len()
     }
 
     /// Shut down: wakes all consumers; subsequent pushes fail.
     pub fn close(&self) {
+        // LOCK-ORDER: batcher.queue — flag flip, then broadcast.
         self.q.lock().unwrap().closed = true;
         self.cv.notify_all();
     }

@@ -87,6 +87,9 @@ impl Server {
             cfg.queue_depth,
         ));
         let stop = Arc::new(AtomicBool::new(false));
+        // THREADS: worker pool of cfg.workers detached scorer threads;
+        // they exit when the batcher is closed and drained (next_batch
+        // returns None) and are joined in `shutdown`.
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let b = batcher.clone();
@@ -343,6 +346,8 @@ impl Server {
         }
         let k = req.get("k").and_then(Json::as_usize).unwrap_or(7).max(1);
         let seed = req.get("seed").and_then(Json::as_usize).unwrap_or(1);
+        // LOCK-ORDER: coordinator.testers — exclusive while the tester
+        // observes the batch; never held with coordinator.registry.
         let mut guard = self.testers.write().unwrap();
         let tester = guard.entry(name.to_string()).or_insert_with(|| {
             let measure: Box<dyn CpMeasure> =
@@ -504,6 +509,9 @@ fn err_json(msg: &str) -> Json {
 /// concurrency knob that matters is the worker pool).
 pub fn serve(server: Arc<Server>, listener: TcpListener) -> Result<()> {
     listener.set_nonblocking(true)?;
+    // THREADS: one handler thread per accepted connection, all joined
+    // before this function returns; handlers take no locks directly
+    // (they go through Server::handle).
     let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !server.stopping() {
         match listener.accept() {

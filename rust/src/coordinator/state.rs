@@ -259,14 +259,17 @@ impl Registry {
     }
 
     pub fn insert(&self, d: Deployment) {
+        // LOCK-ORDER: coordinator.registry — exclusive insert.
         self.inner.write().unwrap().insert(d.name.clone(), d);
     }
 
     pub fn remove(&self, name: &str) -> bool {
+        // LOCK-ORDER: coordinator.registry — exclusive remove.
         self.inner.write().unwrap().remove(name).is_some()
     }
 
     pub fn names(&self) -> Vec<String> {
+        // LOCK-ORDER: coordinator.registry — shared listing.
         let mut v: Vec<String> =
             self.inner.read().unwrap().keys().cloned().collect();
         v.sort();
@@ -279,6 +282,9 @@ impl Registry {
         name: &str,
         f: impl FnOnce(&Deployment) -> R,
     ) -> Result<R> {
+        // LOCK-ORDER: coordinator.registry — outermost lock; `f` runs
+        // scoring under it and may take runtime.exec_cache /
+        // linalg.tile_queue, both ranked below it.
         let guard = self.inner.read().unwrap();
         let d = guard
             .get(name)
@@ -292,6 +298,9 @@ impl Registry {
         name: &str,
         f: impl FnOnce(&mut Deployment) -> R,
     ) -> Result<R> {
+        // LOCK-ORDER: coordinator.registry — outermost lock, exclusive
+        // for online insert/delete updates; same inner-lock rule as
+        // `with`.
         let mut guard = self.inner.write().unwrap();
         let d = guard
             .get_mut(name)

@@ -29,7 +29,10 @@ pub fn avg_set_size(p_matrix: &[Vec<f64>], eps: f64) -> f64 {
 
 /// Fuzziness of one test point's p-values: sum minus max.
 pub fn fuzziness(ps: &[f64]) -> f64 {
+    // EXACT-ALLOW: EXACT001 reporting metric, not a score path; the
+    // fixed left-to-right Iterator::sum order is itself the spec.
     let sum: f64 = ps.iter().sum();
+    // EXACT-ALLOW: EXACT002 max is an exact lattice op (no rounding).
     let max = ps.iter().cloned().fold(f64::MIN, f64::max);
     sum - max
 }
@@ -37,10 +40,13 @@ pub fn fuzziness(ps: &[f64]) -> f64 {
 /// Mean and (sample) std of a slice.
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {
     let n = xs.len() as f64;
+    // EXACT-ALLOW: EXACT001 reporting statistic (App. G tables), not
+    // compared bitwise against any naive baseline.
     let mean = xs.iter().sum::<f64>() / n;
     if xs.len() < 2 {
         return (mean, 0.0);
     }
+    // EXACT-ALLOW: EXACT001 same: reporting-only variance.
     let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
     (mean, var.sqrt())
 }

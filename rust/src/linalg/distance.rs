@@ -242,9 +242,13 @@ pub fn dist_matrix_sq_into_workers(
         return;
     }
     let queue = Mutex::new(xs.chunks(PAR_TILE_M * p).zip(out.chunks_mut(PAR_TILE_M * n)));
+    // THREADS: `threads` scoped workers joined at scope exit; each owns
+    // the disjoint output tile it pulls, so writes never alias.
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                // LOCK-ORDER: linalg.tile_queue — innermost, held only
+                // for the tile pop, dropped before computing.
                 let job = queue.lock().unwrap().next();
                 match job {
                     Some((xt, ot)) => dist_matrix_sq_into(xt, rows, p, ot),

@@ -444,6 +444,9 @@ impl IcpMeasure for IcpKde {
         let scale = h_scale(self.h, ds.p);
         let mut k = vec![0.0; ds.n()];
         self.engine.kde_row(x, &ds.x, ds.p, h2, &mut k);
+        // EXACT-ALLOW: EXACT001 ICP scoring sums the kernel row in
+        // fixed index order on every engine; the engines only change
+        // how k[j] is produced, never this reduction order.
         let ksum: f64 = (0..ds.n())
             .filter(|&j| ds.y[j] == y)
             .map(|j| k[j])

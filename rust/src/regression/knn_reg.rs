@@ -61,6 +61,8 @@ fn nn_stats(d: &[f64], ys: &[f64], skip: usize, k: usize) -> NnStats {
     });
     items.truncate(k_eff);
     items.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    // EXACT-ALLOW: EXACT001 summation order is pinned by the total_cmp
+    // sort above (distance, then index), identical on every path.
     let sum_k: f64 = items.iter().map(|&(_, j)| ys[j]).sum();
     let sum_k1 = sum_k - ys[items[k_eff - 1].1];
     let delta_k = if k_eff == k {
@@ -103,6 +105,9 @@ fn coefficients(
         a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
     });
     items.truncate(k_eff);
+    // EXACT-ALLOW: EXACT001 select_nth_unstable_by is deterministic for
+    // a given input and this is the only path computing the test sum,
+    // so the reduction order cannot diverge between fast/naive paths.
     let sum: f64 = items.iter().map(|&(_, j)| ds.y[j]).sum();
     (coefs, -sum / kf, 1.0)
 }
@@ -463,6 +468,9 @@ impl IcpKnnRegressor {
             a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
         });
         items.truncate(k_eff);
+        // EXACT-ALLOW: EXACT001 select_nth_unstable_by is deterministic
+        // for a given input and this is the only point-prediction path,
+        // so the reduction order cannot diverge across runs.
         items.iter().map(|&(_, j)| ds.y[j]).sum::<f64>() / k_eff as f64
     }
 

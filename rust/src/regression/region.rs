@@ -60,6 +60,8 @@ impl Region {
 
     /// Total length (inf if any piece is unbounded).
     pub fn total_width(&self) -> f64 {
+        // EXACT-ALLOW: EXACT001 diagnostic width in sorted-interval
+        // order; regions are compared by endpoints, not by this sum.
         self.intervals.iter().map(Interval::width).sum()
     }
 }

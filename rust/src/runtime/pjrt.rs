@@ -17,9 +17,17 @@ pub struct PjrtRuntime {
     cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
-// SAFETY: the underlying PJRT CPU client is thread-safe for compile and
-// execute; all mutable Rust-side state is behind the Mutex above.
+// The auto-traits are blocked only by the raw PJRT_Client pointer inside
+// `xla::PjRtClient`; every Rust-side field is Send + Sync on its own
+// (PathBuf, Manifest, Mutex<HashMap<..>>).
+//
+// SAFETY: Send — `client` is an opaque owned handle; the PJRT C API
+// permits using and destroying a client from a thread other than its
+// creator, and no field borrows thread-local state, so moving is sound.
 unsafe impl Send for PjrtRuntime {}
+// SAFETY: Sync — `&self` calls reach PJRT compile/execute, documented
+// thread-compatible for CPU clients, plus `cache`, whose Mutex (see the
+// runtime.exec_cache sites) serializes the only Rust-side mutation.
 unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
@@ -66,6 +74,9 @@ impl PjrtRuntime {
         args: &[xla::Literal],
         n_outputs: usize,
     ) -> Result<Vec<Vec<f32>>> {
+        // LOCK-ORDER: runtime.exec_cache — held across compile+execute;
+        // innermost (nothing else is acquired under it), may itself be
+        // entered under coordinator.registry.
         let mut cache = self.cache.lock().unwrap();
         if !cache.contains_key(name) {
             let file = self
@@ -106,6 +117,7 @@ impl PjrtRuntime {
 
     /// Number of executables compiled so far (diagnostics / tests).
     pub fn compiled_count(&self) -> usize {
+        // LOCK-ORDER: runtime.exec_cache — read-only size peek.
         self.cache.lock().unwrap().len()
     }
 

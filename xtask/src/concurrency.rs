@@ -1,0 +1,207 @@
+//! Concurrency-discipline lint (LOCK001–LOCK004).
+//!
+//! Inventories every `unsafe` site, lock acquisition and thread spawn
+//! under `rust/src/**` and requires each to carry a structured
+//! annotation:
+//!
+//! - `unsafe` (block / fn / impl)        → `// SAFETY: <rationale>`
+//! - `.lock()` / `.read()` / `.write()` /
+//!   `Condvar::wait*`                    → `// LOCK-ORDER: <name> — <why>`
+//! - `thread::scope` / `thread::spawn` /
+//!   `scope.spawn`                       → `// THREADS: <discipline>` in
+//!                                          the enclosing function
+//!
+//! `LOCK-ORDER` names must come from [`LOCK_ORDER`], the declared total
+//! order over every lock in the tree; within one function, annotated
+//! acquisitions must appear in non-decreasing rank order (`LOCK003`).
+//! The check is lexical and per-function — it cannot see a lock held
+//! across a call boundary — but it pins the *declared* discipline in
+//! the source where a reviewer (and this lint) can diff it.
+//!
+//! Lock-acquisition scanning is gated to files whose code mentions a
+//! sync primitive (`Mutex` / `RwLock` / `Condvar`), so `.read()` /
+//! `.write()` on plain IO types elsewhere never false-positive.
+
+use crate::diag::{Diagnostic, LOCK001, LOCK002, LOCK003, LOCK004};
+use crate::source::SourceModel;
+
+/// The declared lock order for the whole tree, outermost first: a
+/// thread may only acquire a lock whose rank is >= every lock it
+/// already holds. Serving layers sit above compute layers because the
+/// batch worker scores *under* the registry read lock (state.rs →
+/// engines → pjrt cache / linalg tile queue).
+pub const LOCK_ORDER: &[(&str, &str)] = &[
+    ("coordinator.registry", "state.rs deployment-registry RwLock"),
+    ("coordinator.testers", "server.rs exchangeability-tester RwLock"),
+    ("batcher.queue", "batcher.rs queue Mutex + Condvar"),
+    ("runtime.exec_cache", "pjrt.rs executable-cache Mutex"),
+    ("linalg.tile_queue", "distance.rs worker tile-iterator Mutex"),
+    ("bench.result_slots", "timing.rs parallel_map output Mutex"),
+];
+
+fn rank_of(name: &str) -> Option<usize> {
+    LOCK_ORDER.iter().position(|(n, _)| *n == name)
+}
+
+const ACQUIRE_TOKENS: [&str; 5] =
+    [".lock()", ".read()", ".write()", ".wait(", ".wait_timeout("];
+
+const SPAWN_TOKENS: [&str; 3] = ["thread::scope(", "thread::spawn(", ".spawn("];
+
+/// All byte positions of `needle` within `hay`.
+fn find_all(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(needle) {
+        out.push(from + p);
+        from += p + needle.len();
+    }
+    out
+}
+
+/// Word-boundary occurrences of the `unsafe` keyword.
+fn unsafe_sites(joined: &str) -> Vec<usize> {
+    let bytes = joined.as_bytes();
+    find_all(joined, "unsafe")
+        .into_iter()
+        .filter(|&p| {
+            let before_ok = p == 0
+                || !(bytes[p - 1].is_ascii_alphanumeric() || bytes[p - 1] == b'_');
+            let after = p + "unsafe".len();
+            let after_ok = after >= bytes.len()
+                || !(bytes[after].is_ascii_alphanumeric() || bytes[after] == b'_');
+            before_ok && after_ok
+        })
+        .collect()
+}
+
+pub fn check(rel: &str, model: &SourceModel) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let joined = &model.joined;
+
+    // LOCK001: undocumented unsafe
+    for pos in unsafe_sites(joined) {
+        let line = model.line_of(pos);
+        if model.in_test[line] {
+            continue;
+        }
+        let safety = model.annotation_near(line, 3, "SAFETY:");
+        if safety.is_none_or(|s| s.is_empty()) {
+            out.push(Diagnostic::new(
+                LOCK001,
+                rel,
+                line + 1,
+                "`unsafe` without a structured `// SAFETY: <rationale>` \
+                 comment on or directly above the site"
+                    .to_string(),
+            ));
+        }
+    }
+
+    // lock acquisitions: only in files that use sync primitives
+    let uses_sync = ["Mutex", "RwLock", "Condvar"]
+        .iter()
+        .any(|t| joined.contains(t));
+    if uses_sync {
+        // (fn index or usize::MAX, line, rank) per annotated site
+        let mut acquired: Vec<(usize, usize, usize)> = Vec::new();
+        for token in ACQUIRE_TOKENS {
+            for pos in find_all(joined, token) {
+                let line = model.line_of(pos);
+                if model.in_test[line] {
+                    continue;
+                }
+                match model.annotation_near(line, 3, "LOCK-ORDER:") {
+                    None => out.push(Diagnostic::new(
+                        LOCK002,
+                        rel,
+                        line + 1,
+                        format!(
+                            "lock acquisition `{token}` without a \
+                             `// LOCK-ORDER: <name> — <why>` annotation"
+                        ),
+                    )),
+                    Some(text) => {
+                        let name = text.split_whitespace().next().unwrap_or("");
+                        match rank_of(name) {
+                            None => out.push(Diagnostic::new(
+                                LOCK002,
+                                rel,
+                                line + 1,
+                                format!(
+                                    "LOCK-ORDER names unknown lock \
+                                     {name:?}; declare it in \
+                                     xtask::concurrency::LOCK_ORDER"
+                                ),
+                            )),
+                            Some(rank) => {
+                                let f = model
+                                    .fn_of
+                                    .get(line)
+                                    .copied()
+                                    .flatten()
+                                    .unwrap_or(usize::MAX);
+                                acquired.push((f, line, rank));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // LOCK003: within a function, ranks must be non-decreasing in
+        // source order
+        acquired.sort();
+        for w in acquired.windows(2) {
+            let (f0, _l0, r0) = w[0];
+            let (f1, l1, r1) = w[1];
+            if f0 == f1 && f0 != usize::MAX && r1 < r0 {
+                out.push(Diagnostic::new(
+                    LOCK003,
+                    rel,
+                    l1 + 1,
+                    format!(
+                        "acquisition of {:?} after {:?} violates the \
+                         declared lock order (see \
+                         xtask::concurrency::LOCK_ORDER)",
+                        LOCK_ORDER[r1].0, LOCK_ORDER[r0].0
+                    ),
+                ));
+            }
+        }
+    }
+
+    // LOCK004: spawn sites need a THREADS discipline note in the fn
+    for token in SPAWN_TOKENS {
+        for pos in find_all(joined, token) {
+            let line = model.line_of(pos);
+            if model.in_test[line] {
+                continue;
+            }
+            let annotated = match model.fn_of.get(line).copied().flatten() {
+                Some(fi) => {
+                    let f = &model.fns[fi];
+                    (f.start..=f.end).any(|l| {
+                        model
+                            .comments
+                            .get(l)
+                            .is_some_and(|c| c.contains("THREADS:"))
+                    })
+                }
+                None => model.comment_near(line, 3, "THREADS:"),
+            };
+            if !annotated {
+                out.push(Diagnostic::new(
+                    LOCK004,
+                    rel,
+                    line + 1,
+                    format!(
+                        "thread spawn `{token}` in a function without a \
+                         `// THREADS: <discipline>` note"
+                    ),
+                ));
+            }
+        }
+    }
+
+    out
+}

@@ -1,0 +1,64 @@
+//! Lint diagnostics: stable codes, human rendering, and GitHub
+//! workflow-annotation rendering.
+//!
+//! Codes are part of the contract (fixtures and EXACTNESS.md refer to
+//! them by name) — never renumber, only append.
+
+/// One lint finding at a file/line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Stable code, e.g. `EXACT001` or `LOCK002`.
+    pub code: &'static str,
+    /// Workspace-relative path with forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Exactness lint: reassociation-hazard iterator reduction
+/// (`.sum()` / `.product()` over a float iterator chain).
+pub const EXACT001: &str = "EXACT001";
+/// Exactness lint: `fold` / `reduce` with a float accumulator.
+pub const EXACT002: &str = "EXACT002";
+/// Exactness lint: `mul_add` (FMA contraction changes results bitwise).
+pub const EXACT003: &str = "EXACT003";
+/// Exactness lint: compound-assignment accumulation in `linalg/`
+/// outside a blessed kernel function.
+pub const EXACT004: &str = "EXACT004";
+/// Concurrency lint: `unsafe` site without a `// SAFETY:` rationale.
+pub const LOCK001: &str = "LOCK001";
+/// Concurrency lint: lock acquisition without a valid
+/// `// LOCK-ORDER: <name>` annotation.
+pub const LOCK002: &str = "LOCK002";
+/// Concurrency lint: annotated acquisitions violate the declared
+/// lock order within one function.
+pub const LOCK003: &str = "LOCK003";
+/// Concurrency lint: thread spawn site in a function without a
+/// `// THREADS:` discipline note.
+pub const LOCK004: &str = "LOCK004";
+
+impl Diagnostic {
+    pub fn new(code: &'static str, file: &str, line: usize, msg: String) -> Self {
+        Diagnostic {
+            code,
+            file: file.to_string(),
+            line,
+            msg,
+        }
+    }
+
+    /// `path:line: CODE message` — the terminal rendering.
+    pub fn human(&self) -> String {
+        format!("{}:{}: {} {}", self.file, self.line, self.code, self.msg)
+    }
+
+    /// GitHub Actions workflow-command rendering (shows up as an
+    /// inline annotation on the PR diff).
+    pub fn github(&self) -> String {
+        format!(
+            "::error file={},line={},title={}::{}",
+            self.file, self.line, self.code, self.msg
+        )
+    }
+}

@@ -1,0 +1,287 @@
+//! Exactness lint (EXACT001–EXACT004).
+//!
+//! The paper's contract is that every fast path is *bit-identical* to
+//! the naive path, which forbids reassociating float reductions. Inside
+//! the exactness-critical modules this pass flags:
+//!
+//! - `EXACT001` — `.sum()` / `.product()` at the end of an iterator
+//!   adapter chain over floats (iterator reductions are the easiest
+//!   place to silently reassociate during a refactor);
+//! - `EXACT002` — `fold` / `reduce` with a float accumulator;
+//! - `EXACT003` — any `mul_add` (FMA contraction is not the same bit
+//!   pattern as mul-then-add);
+//! - `EXACT004` — compound-assignment accumulation (`+=` etc.) inside
+//!   `linalg/` but outside a blessed kernel function: new float loops
+//!   must route through the blessed kernels, not reimplement them.
+//!
+//! Escape hatches, in order of preference (see EXACTNESS.md):
+//! 1. put the reduction inside a blessed kernel ([`BLESSED`]);
+//! 2. annotate the site: `// EXACT-ALLOW: EXACT001 <why it is exact>`.
+//!
+//! Heuristics, stated honestly: a lexer cannot type-check. A reduction
+//! is treated as float unless the statement carries an integer marker
+//! (`usize`, `.len()`, `to_bits`, ...) and no float marker — unknown
+//! types fail closed (they get flagged and need an annotation).
+
+use crate::diag::{Diagnostic, EXACT001, EXACT002, EXACT003, EXACT004};
+use crate::source::SourceModel;
+
+/// Modules under `rust/src/` bound by the exactness contract.
+pub const CRITICAL_DIRS: [&str; 4] =
+    ["src/linalg/", "src/measures/", "src/regression/", "src/cp/"];
+
+/// Blessed kernel functions, per file suffix: the only places allowed
+/// to contain raw float accumulation. Adding an entry is a reviewed,
+/// documented act — see EXACTNESS.md before touching this table.
+pub const BLESSED: &[(&str, &[&str])] = &[
+    (
+        "linalg/mod.rs",
+        &[
+            "matvec",
+            "tmatvec",
+            "matmul",
+            "gram",
+            "add_diag",
+            "rank1_update",
+            "dot",
+            "dot_matrix",
+            "cholesky",
+            "chol_solve",
+            "spd_inverse",
+        ],
+    ),
+    (
+        "linalg/distance.rs",
+        &[
+            "sq_dist",
+            "sq_dist_x4",
+            "dist_row_sq_into",
+            "dist_matrix_sq_into",
+            "pairwise_sq",
+        ],
+    ),
+    (
+        "linalg/select.rs",
+        &["k_smallest", "k_smallest_by", "from_slice", "insert"],
+    ),
+];
+
+const ADAPTERS: [&str; 16] = [
+    ".iter()",
+    ".iter_mut()",
+    ".into_iter()",
+    ".map(",
+    ".zip(",
+    ".filter(",
+    ".filter_map(",
+    ".flat_map(",
+    ".chain(",
+    ".take(",
+    ".skip(",
+    ".windows(",
+    ".chunks(",
+    ".cloned()",
+    ".copied()",
+    ".rev()",
+];
+
+const FLOAT_MARKERS: [&str; 2] = ["f64", "f32"];
+
+const INT_MARKERS: [&str; 12] = [
+    "usize", "isize", "u64", "u32", "u16", "u8", "i64", "i32", "i16", "i8",
+    ".len()", ".count()",
+];
+
+/// True when `rel` (workspace-relative, forward slashes) is inside an
+/// exactness-critical module.
+pub fn is_critical(rel: &str) -> bool {
+    CRITICAL_DIRS.iter().any(|d| rel.contains(d))
+}
+
+fn is_blessed(rel: &str, fn_name: Option<&str>) -> bool {
+    let Some(name) = fn_name else {
+        return false;
+    };
+    BLESSED
+        .iter()
+        .any(|(suffix, fns)| rel.ends_with(suffix) && fns.contains(&name))
+}
+
+/// `// EXACT-ALLOW: <CODE> <rationale>` on the line or within 3 lines
+/// above, with the matching code and a non-empty rationale.
+fn allowed(model: &SourceModel, line: usize, code: &str) -> bool {
+    let lo = line.saturating_sub(3);
+    (lo..=line).any(|l| {
+        let Some(c) = model.comments.get(l) else {
+            return false;
+        };
+        let Some(p) = c.find("EXACT-ALLOW:") else {
+            return false;
+        };
+        let rest = c[p + "EXACT-ALLOW:".len()..].trim_start();
+        rest.starts_with(code)
+            && !rest[code.len()..].trim().is_empty()
+    })
+}
+
+/// Statement slice of `joined` around byte position `pos`: back to the
+/// previous `;`/`{`/`}`, forward to the next `;` (heuristic — good
+/// enough to spot adapter chains and type markers). The start is
+/// advanced past leading whitespace so it lands on the statement's
+/// first line.
+fn statement_around(joined: &str, pos: usize) -> (usize, String) {
+    let bytes = joined.as_bytes();
+    let mut start = pos;
+    while start > 0 {
+        let b = bytes[start - 1];
+        if b == b';' || b == b'{' || b == b'}' {
+            break;
+        }
+        start -= 1;
+    }
+    while start < pos && bytes[start].is_ascii_whitespace() {
+        start += 1;
+    }
+    let mut end = pos;
+    while end < bytes.len() {
+        let b = bytes[end];
+        if b == b';' || b == b'{' || b == b'}' {
+            break;
+        }
+        end += 1;
+    }
+    (start, joined[start..end].to_string())
+}
+
+fn marker_class(stmt: &str) -> (bool, bool) {
+    let float = FLOAT_MARKERS.iter().any(|m| stmt.contains(m));
+    let int = INT_MARKERS.iter().any(|m| stmt.contains(m));
+    (float, int)
+}
+
+/// All byte positions of `needle` within `hay`.
+fn find_all(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(needle) {
+        out.push(from + p);
+        from += p + needle.len();
+    }
+    out
+}
+
+pub fn check(rel: &str, model: &SourceModel) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if !is_critical(rel) {
+        return out;
+    }
+    let joined = &model.joined;
+
+    // EXACT001 / EXACT002: iterator reductions
+    let reductions: [(&str, &'static str); 6] = [
+        (".sum()", EXACT001),
+        (".sum::<", EXACT001),
+        (".product()", EXACT001),
+        (".product::<", EXACT001),
+        (".fold(", EXACT002),
+        (".reduce(", EXACT002),
+    ];
+    for (token, code) in reductions {
+        for pos in find_all(joined, token) {
+            let line = model.line_of(pos);
+            if model.in_test[line] {
+                continue;
+            }
+            if is_blessed(rel, model.fn_name(line)) {
+                continue;
+            }
+            let (stmt_start, stmt) = statement_around(joined, pos);
+            let before = &stmt[..pos - stmt_start];
+            if !ADAPTERS.iter().any(|a| before.contains(a)) {
+                // a method named sum/fold on a non-iterator receiver
+                // (e.g. KBest::sum) is not a reduction site
+                continue;
+            }
+            let (float, int) = marker_class(&stmt);
+            if !float && int {
+                continue;
+            }
+            // the annotation window anchors at the reduction token AND
+            // at the statement start, so multi-line adapter chains can
+            // carry the comment above the `let`
+            let stmt_line = model.line_of(stmt_start);
+            if allowed(model, line, code) || allowed(model, stmt_line, code) {
+                continue;
+            }
+            let what = if code == EXACT001 {
+                "iterator sum/product"
+            } else {
+                "fold/reduce"
+            };
+            out.push(Diagnostic::new(
+                code,
+                rel,
+                line + 1,
+                format!(
+                    "{what} over a float (or untyped) chain reassociates \
+                     under refactoring; route through a blessed kernel or \
+                     annotate `// EXACT-ALLOW: {code} <why>` \
+                     (token `{token}`)"
+                ),
+            ));
+        }
+    }
+
+    // EXACT003: mul_add anywhere in a critical module
+    for pos in find_all(joined, ".mul_add(") {
+        let line = model.line_of(pos);
+        if model.in_test[line]
+            || is_blessed(rel, model.fn_name(line))
+            || allowed(model, line, EXACT003)
+        {
+            continue;
+        }
+        out.push(Diagnostic::new(
+            EXACT003,
+            rel,
+            line + 1,
+            "mul_add fuses rounding (FMA) and is not bit-identical to \
+             mul-then-add; forbidden in exactness-critical modules"
+                .to_string(),
+        ));
+    }
+
+    // EXACT004: raw accumulation loops are only allowed inside blessed
+    // kernels of the linalg layer
+    if rel.contains("src/linalg/") {
+        for (li, lineco) in model.code.iter().enumerate() {
+            if model.in_test[li] {
+                continue;
+            }
+            let has_acc = ["+=", "-=", "*=", "/="]
+                .iter()
+                .any(|t| lineco.contains(t));
+            if !has_acc {
+                continue;
+            }
+            if is_blessed(rel, model.fn_name(li)) {
+                continue;
+            }
+            if allowed(model, li, EXACT004) {
+                continue;
+            }
+            out.push(Diagnostic::new(
+                EXACT004,
+                rel,
+                li + 1,
+                "accumulation in linalg outside a blessed kernel fn; \
+                 move it into a blessed kernel (and extend the BLESSED \
+                 table in a reviewed change) or annotate \
+                 `// EXACT-ALLOW: EXACT004 <why>`"
+                    .to_string(),
+            ));
+        }
+    }
+
+    out
+}

@@ -1,0 +1,95 @@
+//! In-tree static analysis for the exactness and concurrency contracts.
+//!
+//! Two passes run over every file in `rust/src/**`:
+//!
+//! - [`exactness`] — flags float-reassociation hazards (EXACT001–004)
+//!   in the exactness-critical modules (`linalg/`, `measures/`,
+//!   `regression/`, `cp/`);
+//! - [`concurrency`] — inventories `unsafe` sites, lock acquisitions
+//!   and thread spawns and requires structured `SAFETY:` /
+//!   `LOCK-ORDER:` / `THREADS:` annotations (LOCK001–004), validated
+//!   against the declared [`concurrency::LOCK_ORDER`] table.
+//!
+//! See EXACTNESS.md at the workspace root for the contract, the
+//! annotation grammar, and how to extend the blessed-kernel table.
+//! Entry point: `cargo run -p xtask -- lint`.
+
+pub mod concurrency;
+pub mod diag;
+pub mod exactness;
+pub mod source;
+
+use std::fs;
+use std::path::Path;
+
+use diag::Diagnostic;
+use source::SourceModel;
+
+/// Lint one file's source text. `rel` is the workspace-relative path
+/// with forward slashes (it drives the critical-module and blessed
+/// tables, so fixtures pass synthetic paths like
+/// `rust/src/linalg/fixture.rs`).
+pub fn lint_file(rel: &str, src: &str) -> Vec<Diagnostic> {
+    let model = SourceModel::build(src);
+    let mut out = exactness::check(rel, &model);
+    out.extend(concurrency::check(rel, &model));
+    out
+}
+
+fn walk(dir: &Path, files: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, files)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            files.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `<root>/rust/src`, returning findings
+/// sorted by (file, line, code). `root` is the workspace root.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    walk(&src_root, &mut files)?;
+    let mut out = Vec::new();
+    for p in &files {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(p)?;
+        out.extend(lint_file(&rel, &src));
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.code).cmp(&(&b.file, b.line, b.code)));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_annotated_source_has_no_findings() {
+        let src = "\
+// LOCK-ORDER: batcher.queue — single lock, drain path
+fn drain(q: &std::sync::Mutex<Vec<f64>>) -> Vec<f64> {
+    let mut g = q.lock().unwrap();
+    std::mem::take(&mut *g)
+}
+";
+        assert!(lint_file("rust/src/coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn non_critical_file_skips_exactness() {
+        let src = "fn f(xs: &[f64]) -> f64 { xs.iter().sum() }\n";
+        assert!(lint_file("rust/src/bench_harness/x.rs", src).is_empty());
+        assert_eq!(lint_file("rust/src/cp/x.rs", src).len(), 1);
+    }
+}

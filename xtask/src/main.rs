@@ -1,0 +1,69 @@
+//! `cargo run -p xtask -- lint [--github] [--root <dir>]`
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage / IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+usage: cargo run -p xtask -- lint [--github] [--root <dir>]
+
+  lint        run the exactness + concurrency lint over rust/src/**
+  --github    also emit ::error workflow commands (implied when the
+              GITHUB_ACTIONS env var is set)
+  --root DIR  workspace root (default: current directory)
+";
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let Some(cmd) = args.next() else {
+        eprint!("{USAGE}");
+        return ExitCode::from(2);
+    };
+    if cmd != "lint" {
+        eprintln!("unknown command {cmd:?}\n");
+        eprint!("{USAGE}");
+        return ExitCode::from(2);
+    }
+    let mut github = std::env::var_os("GITHUB_ACTIONS").is_some();
+    let mut root = PathBuf::from(".");
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--github" => github = true,
+            "--root" => match args.next() {
+                Some(d) => root = PathBuf::from(d),
+                None => {
+                    eprintln!("--root needs a directory\n");
+                    eprint!("{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown flag {other:?}\n");
+                eprint!("{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let findings = match xtask::lint_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("xtask lint: cannot read tree under {root:?}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if findings.is_empty() {
+        println!("xtask lint: clean (exactness + concurrency)");
+        return ExitCode::SUCCESS;
+    }
+    for d in &findings {
+        eprintln!("{}", d.human());
+        if github {
+            println!("{}", d.github());
+        }
+    }
+    eprintln!("xtask lint: {} finding(s)", findings.len());
+    ExitCode::from(1)
+}

@@ -1,0 +1,459 @@
+//! A comment/string-aware line model of one Rust source file.
+//!
+//! This is deliberately *not* a parser: the offline build environment
+//! rules out `syn`, and the lint rules only need (a) code with comment,
+//! string and char-literal contents stripped, (b) the comment text per
+//! line (annotations live there), (c) which lines sit inside
+//! `#[cfg(test)]` items, and (d) which named `fn` encloses each line.
+//! A character-level state machine over the raw text provides all four
+//! with no dependencies.
+
+/// Span of one named function (0-based line numbers, inclusive).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// The per-line model the lint passes operate on.
+#[derive(Debug)]
+pub struct SourceModel {
+    /// Code text per line: comments removed, string/char literal
+    /// contents dropped (an empty `""` marks where a string was).
+    pub code: Vec<String>,
+    /// Comment text per line (line + block comments concatenated).
+    pub comments: Vec<String>,
+    /// True for lines inside a `#[cfg(test)]` item.
+    pub in_test: Vec<bool>,
+    /// Innermost enclosing named fn per line (index into `fns`).
+    pub fn_of: Vec<Option<usize>>,
+    pub fns: Vec<FnSpan>,
+    /// All code lines joined with `\n` (for cross-line token search).
+    pub joined: String,
+    /// Byte offset of each line's start within `joined`.
+    pub line_offsets: Vec<usize>,
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    CharLit,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// If `chars[i]` begins a raw (byte) string literal (`r"`, `r#"`,
+/// `br"`, ...), return `(hash_count, index_after_opening_quote)`.
+fn raw_str_start(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+        hashes += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Strip comments and literal contents; returns (code, comments) per
+/// line. Both vectors have identical length (one entry per line).
+fn strip(src: &str) -> (Vec<String>, Vec<String>) {
+    let chars: Vec<char> = src.chars().collect();
+    let mut code = vec![String::new()];
+    let mut comments = vec![String::new()];
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            code.push(String::new());
+            comments.push(String::new());
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.last_mut().unwrap().push_str("\"\"");
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b')
+                    && (i == 0 || !is_ident(chars[i - 1]))
+                {
+                    if let Some((hashes, after)) = raw_str_start(&chars, i) {
+                        code.last_mut().unwrap().push_str("\"\"");
+                        mode = Mode::RawStr(hashes);
+                        i = after;
+                    } else if c == 'b' && next == Some('"') {
+                        code.last_mut().unwrap().push_str("\"\"");
+                        mode = Mode::Str;
+                        i += 2;
+                    } else if c == 'b' && next == Some('\'') {
+                        mode = Mode::CharLit;
+                        i += 2;
+                    } else {
+                        code.last_mut().unwrap().push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime: 'x' or '\... is a char
+                    // literal; anything else ('a in generics, 'static)
+                    // is a lifetime and stays in the code stream.
+                    let n2 = chars.get(i + 2).copied();
+                    if next == Some('\\') || n2 == Some('\'') {
+                        mode = Mode::CharLit;
+                        i += 1;
+                    } else {
+                        code.last_mut().unwrap().push(c);
+                        i += 1;
+                    }
+                } else {
+                    code.last_mut().unwrap().push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comments.last_mut().unwrap().push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comments.last_mut().unwrap().push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    let mut k = 0u32;
+                    while k < hashes
+                        && chars.get(i + 1 + k as usize) == Some(&'#')
+                    {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        mode = Mode::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    (code, comments)
+}
+
+impl SourceModel {
+    pub fn build(src: &str) -> SourceModel {
+        let (code, comments) = strip(src);
+        let n = code.len();
+        let mut in_test = vec![false; n];
+        let mut fns: Vec<FnSpan> = Vec::new();
+        let mut fn_stack: Vec<(usize, i32)> = Vec::new();
+        let mut pending_fn: Option<usize> = None;
+        let mut pending_cfg_test = false;
+        let mut test_open_depth: Option<i32> = None;
+        let mut depth: i32 = 0;
+        // paren/bracket nesting — a `;` inside `[f64; 4]` or a default
+        // type parameter must not cancel a pending fn signature
+        let mut sig_depth: i32 = 0;
+
+        for (li, line) in code.iter().enumerate() {
+            // a nested #[cfg(test)] inside an already-open test region
+            // must not restart (and later prematurely close) the region
+            if line.contains("#[cfg(test)]") && test_open_depth.is_none() {
+                pending_cfg_test = true;
+            }
+            let mut line_is_test = test_open_depth.is_some();
+            let bytes: Vec<char> = line.chars().collect();
+            let mut k = 0;
+            while k < bytes.len() {
+                let c = bytes[k];
+                if c == '{' {
+                    if pending_cfg_test {
+                        pending_cfg_test = false;
+                        test_open_depth = Some(depth);
+                        line_is_test = true;
+                    }
+                    if let Some(fi) = pending_fn.take() {
+                        fn_stack.push((fi, depth));
+                    }
+                    depth += 1;
+                    k += 1;
+                } else if c == '}' {
+                    depth -= 1;
+                    if test_open_depth == Some(depth) {
+                        test_open_depth = None;
+                    }
+                    while let Some(&(fi, fd)) = fn_stack.last() {
+                        if depth == fd {
+                            fns[fi].end = li;
+                            fn_stack.pop();
+                        } else {
+                            break;
+                        }
+                    }
+                    k += 1;
+                } else if c == '(' || c == '[' {
+                    sig_depth += 1;
+                    k += 1;
+                } else if c == ')' || c == ']' {
+                    sig_depth = (sig_depth - 1).max(0);
+                    k += 1;
+                } else if c == ';' {
+                    // `#[cfg(test)] use ...;` or a bodyless trait decl —
+                    // but only at nesting depth 0 (`[f64; 4]` is not a
+                    // statement end)
+                    if sig_depth == 0 {
+                        if test_open_depth.is_none() {
+                            pending_cfg_test = false;
+                        }
+                        pending_fn = None;
+                    }
+                    k += 1;
+                } else if is_ident(c) && !c.is_ascii_digit() {
+                    let s = k;
+                    while k < bytes.len() && is_ident(bytes[k]) {
+                        k += 1;
+                    }
+                    let word: String = bytes[s..k].iter().collect();
+                    if word == "fn" {
+                        let mut k2 = k;
+                        while k2 < bytes.len() && bytes[k2].is_whitespace() {
+                            k2 += 1;
+                        }
+                        let s2 = k2;
+                        while k2 < bytes.len() && is_ident(bytes[k2]) {
+                            k2 += 1;
+                        }
+                        if k2 > s2 {
+                            let name: String = bytes[s2..k2].iter().collect();
+                            fns.push(FnSpan {
+                                name,
+                                start: li,
+                                end: li,
+                            });
+                            pending_fn = Some(fns.len() - 1);
+                            k = k2;
+                        }
+                    }
+                } else {
+                    k += 1;
+                }
+            }
+            in_test[li] = line_is_test || test_open_depth.is_some();
+        }
+        // unclosed functions (EOF) extend to the last line
+        for &(fi, _) in &fn_stack {
+            fns[fi].end = n.saturating_sub(1);
+        }
+
+        let mut fn_of = vec![None; n];
+        for (idx, f) in fns.iter().enumerate() {
+            for slot in fn_of.iter_mut().take(f.end + 1).skip(f.start) {
+                *slot = Some(idx);
+            }
+        }
+
+        let mut joined = String::new();
+        let mut line_offsets = Vec::with_capacity(n);
+        for l in &code {
+            line_offsets.push(joined.len());
+            joined.push_str(l);
+            joined.push('\n');
+        }
+
+        SourceModel {
+            code,
+            comments,
+            in_test,
+            fn_of,
+            fns,
+            joined,
+            line_offsets,
+        }
+    }
+
+    /// Map a byte offset in `joined` to its 0-based line number.
+    pub fn line_of(&self, pos: usize) -> usize {
+        match self.line_offsets.binary_search(&pos) {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        }
+    }
+
+    /// Name of the innermost function enclosing `line`, if any.
+    pub fn fn_name(&self, line: usize) -> Option<&str> {
+        self.fn_of
+            .get(line)
+            .copied()
+            .flatten()
+            .map(|i| self.fns[i].name.as_str())
+    }
+
+    /// True if a comment containing `marker` appears on `line` itself
+    /// or within the `window` lines directly above it.
+    pub fn comment_near(&self, line: usize, window: usize, marker: &str) -> bool {
+        let lo = line.saturating_sub(window);
+        (lo..=line)
+            .any(|l| self.comments.get(l).is_some_and(|c| c.contains(marker)))
+    }
+
+    /// The text after the first occurrence of `marker` in the comments
+    /// on `line` or the `window` lines above (nearest-last wins).
+    pub fn annotation_near(&self, line: usize, window: usize, marker: &str) -> Option<String> {
+        let lo = line.saturating_sub(window);
+        let mut found = None;
+        for l in lo..=line {
+            if let Some(c) = self.comments.get(l) {
+                if let Some(p) = c.find(marker) {
+                    found = Some(c[p + marker.len()..].trim().to_string());
+                }
+            }
+        }
+        found
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let m = SourceModel::build(
+            "let a = \"x.sum()\"; // c.sum()\nlet b = 1; /* y\n.sum() */ let c = 2;\n",
+        );
+        assert!(!m.joined.contains("sum"));
+        assert!(m.comments[0].contains("c.sum()"));
+        assert!(m.comments[1].contains('y'));
+        assert!(m.code[0].contains("let a"));
+        assert!(m.code[2].contains("let c"));
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let m = SourceModel::build(concat!(
+            "let s = r#\"a \" .sum() \"#;\nlet c = '\\'';\n",
+            "let l: &'static str = \"\";\nlet d = 'x';\n",
+        ));
+        assert!(!m.joined.contains("sum"));
+        assert!(!m.joined.contains('x'));
+        assert!(m.code[2].contains("'static"));
+    }
+
+    #[test]
+    fn cfg_test_region_detected() {
+        let src = concat!(
+            "fn real() { a(); }\n#[cfg(test)]\nmod tests {\n",
+            "    fn t() { b(); }\n}\nfn after() {}\n",
+        );
+        let m = SourceModel::build(src);
+        assert!(!m.in_test[0]);
+        assert!(m.in_test[2]);
+        assert!(m.in_test[3]);
+        assert!(m.in_test[4]);
+        assert!(!m.in_test[5]);
+    }
+
+    #[test]
+    fn fn_spans_nested() {
+        let src = concat!(
+            "fn outer() {\n    let c = |x: i32| {\n        x\n    };\n",
+            "    inner_call();\n}\nfn second() {\n}\n",
+        );
+        let m = SourceModel::build(src);
+        assert_eq!(m.fn_name(0), Some("outer"));
+        assert_eq!(m.fn_name(2), Some("outer"));
+        assert_eq!(m.fn_name(4), Some("outer"));
+        assert_eq!(m.fn_name(6), Some("second"));
+    }
+
+    #[test]
+    fn trait_decl_without_body_is_not_a_span() {
+        let src = "trait T {\n    fn decl(&self) -> usize;\n}\nfn body() { x(); }\n";
+        let m = SourceModel::build(src);
+        assert_eq!(m.fn_name(3), Some("body"));
+        // the bodyless decl never opens a span over following lines
+        assert_eq!(m.fn_name(2), None);
+    }
+
+    #[test]
+    fn array_return_type_semicolon_keeps_fn_span() {
+        // the `;` in `[f64; 4]` must not cancel the pending signature
+        let src = "fn quad(a: &[f64]) -> [f64; 4] {\n    let mut acc = [0.0; 4];\n    acc\n}\n";
+        let m = SourceModel::build(src);
+        assert_eq!(m.fn_name(1), Some("quad"));
+        assert_eq!(m.fn_name(2), Some("quad"));
+    }
+
+    #[test]
+    fn annotation_window() {
+        let src = "// LOCK-ORDER: batcher.queue — drain path\nlet x = 1;\nlet g = q.lock();\n";
+        let m = SourceModel::build(src);
+        assert!(m.comment_near(2, 3, "LOCK-ORDER:"));
+        let a = m.annotation_near(2, 3, "LOCK-ORDER:").unwrap();
+        assert!(a.starts_with("batcher.queue"));
+        assert!(!m.comment_near(2, 3, "SAFETY:"));
+    }
+}

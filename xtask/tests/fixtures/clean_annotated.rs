@@ -1,0 +1,32 @@
+// Fixture: every rule exercised with a correct annotation — the lint
+// must report nothing here (linted as rust/src/cp/fixture.rs).
+
+use std::sync::{Mutex, RwLock};
+
+pub struct S {
+    registry: RwLock<Vec<f64>>,
+    cache: Mutex<Vec<f64>>,
+}
+
+impl S {
+    pub fn ordered(&self) -> std::thread::JoinHandle<()> {
+        // THREADS: fixture worker joined by the caller.
+        // LOCK-ORDER: coordinator.registry — outer lock first.
+        let a = self.registry.read().unwrap();
+        // LOCK-ORDER: runtime.exec_cache — inner lock second.
+        let b = self.cache.lock().unwrap();
+        drop((a, b));
+        std::thread::spawn(|| {})
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    // EXACT-ALLOW: EXACT001 fixture — fixed reduction order is the spec.
+    let s: f64 = xs.iter().sum();
+    s / xs.len() as f64
+}
+
+pub fn head(xs: &[f64]) -> f64 {
+    // SAFETY: caller guarantees xs is non-empty.
+    unsafe { *xs.get_unchecked(0) }
+}

@@ -1,0 +1,7 @@
+// Fixture: EXACT001 — iterator sum over floats in a critical module.
+// Linted with the synthetic path rust/src/cp/fixture.rs.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    let s: f64 = xs.iter().sum();
+    s / xs.len() as f64
+}

@@ -1,0 +1,5 @@
+// Fixture: EXACT002 — fold with a float accumulator.
+
+pub fn total(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0f64, |acc, x| acc + x)
+}

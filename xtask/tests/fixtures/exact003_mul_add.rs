@@ -1,0 +1,5 @@
+// Fixture: EXACT003 — FMA contraction in a critical module.
+
+pub fn axpy(a: f64, x: f64, y: f64) -> f64 {
+    a.mul_add(x, y)
+}

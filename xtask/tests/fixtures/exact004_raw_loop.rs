@@ -1,0 +1,10 @@
+// Fixture: EXACT004 — raw accumulation loop in linalg outside a
+// blessed kernel (linted as rust/src/linalg/fixture.rs).
+
+pub fn my_dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}

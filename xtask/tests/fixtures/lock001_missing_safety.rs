@@ -1,0 +1,5 @@
+// Fixture: LOCK001 — unsafe block with no safety rationale comment.
+
+pub fn first(xs: &[f64]) -> f64 {
+    unsafe { *xs.get_unchecked(0) }
+}

@@ -1,0 +1,8 @@
+// Fixture: LOCK002 — lock acquisition without a LOCK-ORDER annotation.
+
+use std::sync::Mutex;
+
+pub fn drain(q: &Mutex<Vec<u8>>) -> Vec<u8> {
+    let mut g = q.lock().unwrap();
+    std::mem::take(&mut *g)
+}

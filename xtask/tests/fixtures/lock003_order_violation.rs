@@ -1,0 +1,19 @@
+// Fixture: LOCK003 — both acquisitions are annotated with valid names,
+// but the second is ranked *above* the first in LOCK_ORDER.
+
+use std::sync::{Mutex, RwLock};
+
+pub struct S {
+    cache: Mutex<Vec<u8>>,
+    registry: RwLock<Vec<u8>>,
+}
+
+impl S {
+    pub fn backwards(&self) -> usize {
+        // LOCK-ORDER: runtime.exec_cache — taken first (wrongly).
+        let a = self.cache.lock().unwrap();
+        // LOCK-ORDER: coordinator.registry — outer lock taken second.
+        let b = self.registry.read().unwrap();
+        a.len() + b.len()
+    }
+}

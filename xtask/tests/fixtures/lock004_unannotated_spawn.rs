@@ -1,0 +1,5 @@
+// Fixture: LOCK004 — thread spawn in a function with no THREADS: note.
+
+pub fn background() -> std::thread::JoinHandle<()> {
+    std::thread::spawn(|| {})
+}

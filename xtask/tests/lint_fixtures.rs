@@ -1,0 +1,168 @@
+//! Each bad fixture must fire exactly one diagnostic with its stable
+//! code; the clean fixture must fire none. Fixtures are linted under
+//! synthetic `rust/src/...` paths so the critical-module and
+//! blessed-kernel tables apply exactly as they do on the real tree.
+
+use std::fs;
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> String {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {p:?}: {e}"))
+}
+
+/// Lint `fixture_file` as if it lived at `rel` and assert exactly one
+/// finding with `code`.
+fn assert_one(fixture_file: &str, rel: &str, code: &str) {
+    let src = fixture(fixture_file);
+    let found = xtask::lint_file(rel, &src);
+    assert_eq!(
+        found.len(),
+        1,
+        "{fixture_file}: expected exactly one finding, got {:?}",
+        found.iter().map(|d| d.human()).collect::<Vec<_>>()
+    );
+    assert_eq!(found[0].code, code, "{fixture_file}: {}", found[0].human());
+}
+
+#[test]
+fn exact001_iterator_float_sum() {
+    assert_one(
+        "exact001_float_sum.rs",
+        "rust/src/cp/fixture.rs",
+        "EXACT001",
+    );
+}
+
+#[test]
+fn exact002_float_fold() {
+    assert_one(
+        "exact002_float_fold.rs",
+        "rust/src/measures/fixture.rs",
+        "EXACT002",
+    );
+}
+
+#[test]
+fn exact003_mul_add() {
+    assert_one(
+        "exact003_mul_add.rs",
+        "rust/src/regression/fixture.rs",
+        "EXACT003",
+    );
+}
+
+#[test]
+fn exact004_raw_linalg_loop() {
+    assert_one(
+        "exact004_raw_loop.rs",
+        "rust/src/linalg/fixture.rs",
+        "EXACT004",
+    );
+}
+
+#[test]
+fn lock001_undocumented_unsafe() {
+    assert_one(
+        "lock001_missing_safety.rs",
+        "rust/src/runtime/fixture.rs",
+        "LOCK001",
+    );
+}
+
+#[test]
+fn lock002_missing_lock_order() {
+    assert_one(
+        "lock002_missing_lock_order.rs",
+        "rust/src/coordinator/fixture.rs",
+        "LOCK002",
+    );
+}
+
+#[test]
+fn lock003_rank_violation() {
+    assert_one(
+        "lock003_order_violation.rs",
+        "rust/src/coordinator/fixture.rs",
+        "LOCK003",
+    );
+}
+
+#[test]
+fn lock004_unannotated_spawn() {
+    assert_one(
+        "lock004_unannotated_spawn.rs",
+        "rust/src/coordinator/fixture.rs",
+        "LOCK004",
+    );
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let src = fixture("clean_annotated.rs");
+    let found = xtask::lint_file("rust/src/cp/fixture.rs", &src);
+    assert!(
+        found.is_empty(),
+        "clean fixture fired: {:?}",
+        found.iter().map(|d| d.human()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn critical_paths_are_position_independent() {
+    // the same bad source is clean outside the critical modules but
+    // flagged inside every one of them
+    let src = fixture("exact001_float_sum.rs");
+    assert!(xtask::lint_file("rust/src/data/fixture.rs", &src).is_empty());
+    for dir in xtask::exactness::CRITICAL_DIRS {
+        let rel = format!("rust/{dir}fixture.rs");
+        assert_eq!(xtask::lint_file(&rel, &src).len(), 1, "{rel}");
+    }
+}
+
+#[test]
+fn exact_allow_requires_matching_code_and_rationale() {
+    let base = "pub fn m(xs: &[f64]) -> f64 {\n    let s: f64 = xs.iter().sum();\n    s\n}\n";
+    let rel = "rust/src/cp/fixture.rs";
+    assert_eq!(xtask::lint_file(rel, base).len(), 1);
+    // wrong code does not silence the finding
+    let wrong = base.replace(
+        "    let s:",
+        "    // EXACT-ALLOW: EXACT002 wrong code\n    let s:",
+    );
+    assert_eq!(xtask::lint_file(rel, &wrong).len(), 1);
+    // bare code with no rationale does not count either
+    let bare = base.replace(
+        "    let s:",
+        "    // EXACT-ALLOW: EXACT001\n    let s:",
+    );
+    assert_eq!(xtask::lint_file(rel, &bare).len(), 1);
+    // right code + rationale silences it
+    let right = base.replace(
+        "    let s:",
+        "    // EXACT-ALLOW: EXACT001 order is the spec here\n    let s:",
+    );
+    assert!(xtask::lint_file(rel, &right).is_empty());
+}
+
+#[test]
+fn real_tree_is_clean_when_present() {
+    // when run from the workspace (CI does), the whole tree must lint
+    // clean; skip quietly if the layout is not there (sandboxed runs)
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+    if !root.join("rust/src").is_dir() {
+        return;
+    }
+    let found = xtask::lint_tree(&root).expect("walk rust/src");
+    assert!(
+        found.is_empty(),
+        "real tree has lint findings:\n{}",
+        found
+            .iter()
+            .map(|d| d.human())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
