@@ -135,4 +135,54 @@ fn main() {
     let mut m = build_measure(MeasureKind::LsSvm, &cfg, None);
     m.fit(&ds2);
     bench_measure(&m.name(), m.as_ref(), &xs2, &labels2, budget);
+
+    trace_overhead(&ds4, &xs4, &labels4, &cfg, budget, quick);
+}
+
+/// Observability acceptance gate: the batched scoring hot path with
+/// span tracing ON must stay within 5% of the untraced time. Timed on
+/// the busiest measure (simplified k-NN hits the dist-kernel, scoring
+/// and p-value-agg spans). The assertion runs in full mode only —
+/// BENCH_QUICK budgets are too short for a stable ratio.
+fn trace_overhead(
+    ds: &exact_cp::data::Dataset,
+    xs: &[&[f64]],
+    labels: &[Label],
+    cfg: &MeasureConfig,
+    budget: Duration,
+    quick: bool,
+) {
+    use exact_cp::obs::trace;
+
+    let mut m = build_measure(MeasureKind::SimplifiedKnn, cfg, None);
+    m.fit(ds);
+    let run = || {
+        m.scores_batch(xs, labels)
+            .iter()
+            .map(|s| s.test)
+            .sum::<f64>()
+    };
+    trace::set_enabled(false);
+    let t_off = exact_cp::bench_harness::timing::microbench(
+        "sknn scores_batch: tracing off",
+        budget,
+        run,
+    );
+    trace::init(trace::DEFAULT_RING_CAPACITY);
+    trace::set_enabled(true);
+    let t_on = exact_cp::bench_harness::timing::microbench(
+        "sknn scores_batch: tracing on",
+        budget,
+        run,
+    );
+    trace::set_enabled(false);
+    let overhead = t_on / t_off - 1.0;
+    println!("tracing overhead: {:+.2}%", overhead * 100.0);
+    if !quick {
+        assert!(
+            overhead <= 0.05,
+            "span instrumentation overhead {:.2}% exceeds the 5% budget",
+            overhead * 100.0
+        );
+    }
 }

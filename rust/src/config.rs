@@ -126,6 +126,45 @@ impl Default for MeasureConfig {
     }
 }
 
+/// Observability configuration (`[serve.obs]`). Everything here is off
+/// the exact-value path: tracing and validity monitoring read timings
+/// and finished outputs only (EXACTNESS.md).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// enable stage-level span tracing at startup (`op:"trace"` /
+    /// `--trace-out` still work later; this only sets the initial
+    /// state)
+    pub trace: bool,
+    /// trace ring-buffer capacity, in events
+    pub ring_capacity: usize,
+    /// epsilons the per-deployment validity monitors track (empty =
+    /// the monitor's built-in defaults)
+    pub epsilons: Vec<f64>,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            trace: false,
+            ring_capacity: 65_536,
+            epsilons: Vec::new(),
+        }
+    }
+}
+
+/// One `[serve.deployment.<name>]` block: a deployment trained at
+/// startup with its *own* hyperparameters instead of the process-wide
+/// `[measure]` block. `kind` is a measure name ("knn", "kde", ...) for
+/// classification or a regressor name ("ridge", "knn-reg", ...) for
+/// regression; unset hyperparameters inherit the global `[measure]`
+/// values.
+#[derive(Clone, Debug)]
+pub struct DeploymentSpec {
+    pub name: String,
+    pub kind: String,
+    pub measure: MeasureConfig,
+}
+
 /// Serving-coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -143,6 +182,10 @@ pub struct ServeConfig {
     /// scoped worker threads inside one distance-matrix launch
     /// (1 = serial; any value yields bit-identical output)
     pub dist_workers: usize,
+    /// observability knobs (`[serve.obs]`)
+    pub obs: ObsConfig,
+    /// per-deployment specs (`[serve.deployment.<name>]` blocks)
+    pub deployments: Vec<DeploymentSpec>,
 }
 
 impl Default for ServeConfig {
@@ -155,6 +198,8 @@ impl Default for ServeConfig {
             workers: 2,
             queue_depth: 1024,
             dist_workers: 1,
+            obs: ObsConfig::default(),
+            deployments: Vec::new(),
         }
     }
 }
@@ -217,15 +262,40 @@ impl Config {
     /// Build from a parsed TOML-lite document, defaulting every field.
     pub fn from_doc(doc: &Doc) -> Config {
         let d = Config::default();
+        let measure = MeasureConfig {
+            k: doc.usize_or("measure.k", d.measure.k),
+            h: doc.f64_or("measure.h", d.measure.h),
+            rho: doc.f64_or("measure.rho", d.measure.rho),
+            b: doc.usize_or("measure.b", d.measure.b),
+            rff_dim: doc.usize_or("measure.rff_dim", d.measure.rff_dim),
+            rff_gamma: doc.f64_or("measure.rff_gamma", d.measure.rff_gamma),
+        };
+        // [serve.deployment.<name>] blocks: per-deployment
+        // hyperparameters inheriting the global [measure] values
+        let deployments = doc
+            .subsections("serve.deployment")
+            .into_iter()
+            .map(|name| {
+                let p = format!("serve.deployment.{name}");
+                DeploymentSpec {
+                    measure: MeasureConfig {
+                        k: doc.usize_or(&format!("{p}.k"), measure.k),
+                        h: doc.f64_or(&format!("{p}.h"), measure.h),
+                        rho: doc.f64_or(&format!("{p}.rho"), measure.rho),
+                        b: doc.usize_or(&format!("{p}.b"), measure.b),
+                        rff_dim: doc
+                            .usize_or(&format!("{p}.rff_dim"), measure.rff_dim),
+                        rff_gamma: doc.f64_or(
+                            &format!("{p}.rff_gamma"),
+                            measure.rff_gamma,
+                        ),
+                    },
+                    kind: doc.str_or(&format!("{p}.kind"), "simplified-knn"),
+                    name,
+                }
+            })
+            .collect();
         Config {
-            measure: MeasureConfig {
-                k: doc.usize_or("measure.k", d.measure.k),
-                h: doc.f64_or("measure.h", d.measure.h),
-                rho: doc.f64_or("measure.rho", d.measure.rho),
-                b: doc.usize_or("measure.b", d.measure.b),
-                rff_dim: doc.usize_or("measure.rff_dim", d.measure.rff_dim),
-                rff_gamma: doc.f64_or("measure.rff_gamma", d.measure.rff_gamma),
-            },
             serve: ServeConfig {
                 addr: doc.str_or("serve.addr", &d.serve.addr),
                 max_batch: doc.usize_or("serve.max_batch", d.serve.max_batch),
@@ -236,7 +306,17 @@ impl Config {
                 queue_depth: doc.usize_or("serve.queue_depth", d.serve.queue_depth),
                 dist_workers: doc
                     .usize_or("serve.dist_workers", d.serve.dist_workers),
+                obs: ObsConfig {
+                    trace: doc.bool_or("serve.obs.trace", d.serve.obs.trace),
+                    ring_capacity: doc.usize_or(
+                        "serve.obs.ring_capacity",
+                        d.serve.obs.ring_capacity,
+                    ),
+                    epsilons: doc.f64_array("serve.obs.epsilons"),
+                },
+                deployments,
             },
+            measure,
             experiment: ExperimentConfig {
                 train_sizes: doc.usize_array("experiment.train_sizes"),
                 n_test: doc.usize_or("experiment.n_test", d.experiment.n_test),
@@ -298,6 +378,55 @@ mod tests {
         assert_eq!(c.serve.workers, 2);
         assert_eq!(c.serve.dist_workers, 4);
         assert_eq!(ServeConfig::default().dist_workers, 1);
+    }
+
+    #[test]
+    fn obs_block_parses_with_defaults() {
+        let c = Config::from_doc(&toml_lite::parse("").unwrap());
+        assert!(!c.serve.obs.trace);
+        assert_eq!(c.serve.obs.ring_capacity, 65_536);
+        assert!(c.serve.obs.epsilons.is_empty());
+        assert!(c.serve.deployments.is_empty());
+        let doc = toml_lite::parse(
+            r#"
+            [serve.obs]
+            trace = true
+            ring_capacity = 1024
+            epsilons = [0.05, 0.1]
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc);
+        assert!(c.serve.obs.trace);
+        assert_eq!(c.serve.obs.ring_capacity, 1024);
+        assert_eq!(c.serve.obs.epsilons, vec![0.05, 0.1]);
+    }
+
+    #[test]
+    fn deployment_blocks_inherit_global_measure() {
+        let doc = toml_lite::parse(
+            r#"
+            [measure]
+            k = 9
+            rho = 2.0
+            [serve.deployment.fast]
+            kind = "simplified-knn"
+            k = 3
+            [serve.deployment.rrcm]
+            kind = "ridge"
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(c.serve.deployments.len(), 2);
+        let fast = &c.serve.deployments[0];
+        assert_eq!(fast.name, "fast");
+        assert_eq!(fast.kind, "simplified-knn");
+        assert_eq!(fast.measure.k, 3, "per-deployment override");
+        assert_eq!(fast.measure.rho, 2.0, "inherits global [measure]");
+        let rrcm = &c.serve.deployments[1];
+        assert_eq!(rrcm.kind, "ridge");
+        assert_eq!(rrcm.measure.k, 9, "inherits global k");
     }
 
     #[test]

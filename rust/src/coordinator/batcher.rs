@@ -32,6 +32,18 @@ pub enum PushError {
     Closed,
 }
 
+/// One drained batch plus assembly observability (consumed by the
+/// worker pool to feed batch-assembly spans and the queue-depth gauge).
+pub struct Drain<T> {
+    pub items: Vec<T>,
+    /// when the first item of this batch was observed (assembly start)
+    pub started: Instant,
+    /// time spent assembling: first item observed -> batch handed over
+    pub assembled: Duration,
+    /// items still queued right after this drain (queue-depth gauge)
+    pub depth_after: usize,
+}
+
 impl<T> Batcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration, capacity: usize) -> Self {
         assert!(max_batch >= 1);
@@ -68,6 +80,15 @@ impl<T> Batcher<T> {
     /// drain up to `max_batch`, waiting `max_wait` for the batch to fill.
     /// Returns None when closed and drained.
     pub fn next_batch(&self) -> Option<Vec<T>> {
+        self.next_batch_stats().map(|d| d.items)
+    }
+
+    /// [`Batcher::next_batch`] plus assembly stats — same drain
+    /// semantics (model-checked through `next_batch` in
+    /// `tests/batcher_schedules.rs`), additionally reporting when
+    /// assembly started, how long it took, and the queue depth right
+    /// after the drain.
+    pub fn next_batch_stats(&self) -> Option<Drain<T>> {
         // LOCK-ORDER: batcher.queue — consumer drain; no other lock is
         // ever taken while this one is held.
         let mut st = self.q.lock().unwrap();
@@ -80,7 +101,8 @@ impl<T> Batcher<T> {
             st = self.cv.wait(st).unwrap();
         }
         // give stragglers a chance to fill the batch
-        let deadline = Instant::now() + self.max_wait;
+        let started = Instant::now();
+        let deadline = started + self.max_wait;
         while st.items.len() < self.max_batch && !st.closed {
             let now = Instant::now();
             if now >= deadline {
@@ -94,7 +116,14 @@ impl<T> Batcher<T> {
             }
         }
         let take = st.items.len().min(self.max_batch);
-        Some(st.items.drain(..take).collect())
+        let items: Vec<T> = st.items.drain(..take).collect();
+        let depth_after = st.items.len();
+        Some(Drain {
+            items,
+            started,
+            assembled: started.elapsed(),
+            depth_after,
+        })
     }
 
     /// Current depth (diagnostics).
@@ -222,6 +251,23 @@ mod tests {
         assert!(b.next_batch().is_none());
         assert!(b.next_batch().is_none(), "closed state is terminal");
         assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn next_batch_stats_reports_depth_and_assembly() {
+        let b = Batcher::new(2, Duration::from_millis(1), 10);
+        for i in 0..5 {
+            b.push(i).unwrap();
+        }
+        let d = b.next_batch_stats().unwrap();
+        assert_eq!(d.items, vec![0, 1]);
+        assert_eq!(d.depth_after, 3, "gauge sees what is still queued");
+        assert!(d.assembled >= Duration::ZERO);
+        // delegation: next_batch sees the same stream
+        assert_eq!(b.next_batch().unwrap(), vec![2, 3]);
+        assert_eq!(b.next_batch_stats().unwrap().items, vec![4]);
+        b.close();
+        assert!(b.next_batch_stats().is_none());
     }
 
     #[test]

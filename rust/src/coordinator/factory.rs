@@ -1,10 +1,13 @@
 //! Measure factory: configuration -> boxed nonconformity measure
-//! (classification) or boxed CP regressor (regression).
+//! (classification) or boxed CP regressor (regression), plus the
+//! `[serve.deployment.X]` spec resolver.
 
 use std::sync::Arc;
 
-use crate::config::{MeasureConfig, MeasureKind, RegressorKind};
+use crate::config::{DeploymentSpec, MeasureConfig, MeasureKind, RegressorKind};
+use crate::coordinator::state::Deployment;
 use crate::cp::measure::CpMeasure;
+use crate::data::{Dataset, RegressionDataset};
 use crate::linalg::engine::Engine;
 use crate::measures::{
     BootstrapOptimized, BootstrapParams, BootstrapStandard, FeatureMap,
@@ -89,6 +92,43 @@ pub fn build_regressor(
             Box::new(KnnRegressorStandard::with_engine(cfg.k, eng))
         }
         RegressorKind::Ridge => Box::new(RidgeCp::new(cfg.rho)),
+    }
+}
+
+/// Train one `[serve.deployment.X]` spec into a deployment. The spec's
+/// `kind` string is tried as a classification measure first, then as a
+/// regressor; each spec carries its *own* `MeasureConfig` (k, ridge
+/// rho, bandwidth, ...), so deployments of the same kind can serve
+/// different hyperparameters side by side.
+pub fn deployment_from_spec(
+    spec: &DeploymentSpec,
+    cls: &Dataset,
+    reg: &RegressionDataset,
+    engine: Option<Engine>,
+) -> anyhow::Result<Deployment> {
+    if let Ok(kind) = spec.kind.parse::<MeasureKind>() {
+        return Ok(Deployment::train(
+            &spec.name,
+            kind,
+            &spec.measure,
+            cls,
+            engine,
+        ));
+    }
+    match spec.kind.parse::<RegressorKind>() {
+        Ok(kind) => Ok(Deployment::train_regression(
+            &spec.name,
+            kind,
+            &spec.measure,
+            reg,
+            engine,
+        )),
+        Err(_) => anyhow::bail!(
+            "deployment {:?}: kind {:?} is neither a measure nor a \
+             regressor",
+            spec.name,
+            spec.kind
+        ),
     }
 }
 
@@ -181,6 +221,53 @@ mod tests {
             assert_eq!(coefs.len(), 20, "{}", r.name());
             assert!(b.is_finite());
         }
+    }
+
+    #[test]
+    fn deployment_spec_resolves_both_families() {
+        use crate::data::{make_regression, RegressionSpec};
+        let cls = make_classification(
+            &ClassificationSpec {
+                n_samples: 24,
+                ..Default::default()
+            },
+            1,
+        );
+        let reg = make_regression(
+            &RegressionSpec {
+                n_samples: 20,
+                n_features: 4,
+                n_informative: 3,
+                noise: 2.0,
+            },
+            3,
+        );
+        let spec = DeploymentSpec {
+            name: "knn-a".into(),
+            kind: "simplified-knn".into(),
+            measure: MeasureConfig {
+                k: 3,
+                ..Default::default()
+            },
+        };
+        let d = deployment_from_spec(&spec, &cls, &reg, None).unwrap();
+        assert!(!d.is_regression());
+        let spec = DeploymentSpec {
+            name: "rrcm".into(),
+            kind: "ridge".into(),
+            measure: MeasureConfig {
+                rho: 0.7,
+                ..Default::default()
+            },
+        };
+        let d = deployment_from_spec(&spec, &cls, &reg, None).unwrap();
+        assert!(d.is_regression());
+        let bad = DeploymentSpec {
+            name: "x".into(),
+            kind: "bogus".into(),
+            measure: MeasureConfig::default(),
+        };
+        assert!(deployment_from_spec(&bad, &cls, &reg, None).is_err());
     }
 
     #[test]

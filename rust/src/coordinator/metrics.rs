@@ -1,19 +1,24 @@
-//! Serving metrics: lock-free counters + a fixed-bucket latency
-//! histogram (microseconds, log-spaced), snapshotted as JSON for the
+//! Process-wide serving metrics: lock-free counters + fixed-bucket
+//! latency / batch-size histograms, snapshotted as JSON for the
 //! `stats` RPC.
+//!
+//! These are the *global* aggregates; per-deployment × per-op blocks
+//! live in [`crate::obs::metrics::ObsRegistry`] and are merged into the
+//! same `stats` answer by the server.
+//!
+//! The latency histogram is fed by EVERY response arm — success,
+//! error, rejected (backpressure) and timeout — so tail quantiles are
+//! not survivorship-biased under load shedding; `mean_latency_us` is
+//! the histogram's own sum/count for the same reason (it used to divide
+//! by the `predictions` counter, which silently excluded rejected
+//! requests).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::obs::hist::AtomicHist;
 use crate::util::json::Json;
 
-/// log-spaced latency bucket upper bounds, in microseconds
-const BUCKETS_US: [u64; 12] = [
-    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 100_000, 1_000_000,
-    u64::MAX,
-];
-
 /// Coordinator metrics (all relaxed atomics; serving-side hot path).
-#[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub predictions: AtomicU64,
@@ -22,8 +27,27 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
-    latency: [AtomicU64; 12],
-    latency_sum_us: AtomicU64,
+    latency: AtomicHist,
+    batch_sizes: AtomicHist,
+    /// batcher queue depth, sampled by workers right after each drain
+    queue_depth: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            predictions: AtomicU64::new(0),
+            online_updates: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_items: AtomicU64::new(0),
+            latency: AtomicHist::latency_us(),
+            batch_sizes: AtomicHist::linear(64),
+            queue_depth: AtomicU64::new(0),
+        }
+    }
 }
 
 impl Metrics {
@@ -32,43 +56,37 @@ impl Metrics {
     }
 
     pub fn observe_latency_us(&self, us: u64) {
-        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(11);
-        self.latency[idx].fetch_add(1, Ordering::Relaxed);
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.latency.observe(us as f64);
     }
 
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(size as u64, Ordering::Relaxed);
+        self.batch_sizes.observe(size as f64);
+    }
+
+    /// Gauge: batcher queue depth observed right after a drain.
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
     }
 
     /// Approximate latency quantile from the histogram.
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
-        let total: u64 = self
-            .latency
-            .iter()
-            .map(|c| c.load(Ordering::Relaxed))
-            .sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (q * total as f64).ceil() as u64;
-        let mut acc = 0;
-        for (i, c) in self.latency.iter().enumerate() {
-            acc += c.load(Ordering::Relaxed);
-            if acc >= target {
-                return BUCKETS_US[i];
-            }
-        }
-        BUCKETS_US[11]
+        self.latency.quantile(q) as u64
     }
 
+    /// Mean over every latency observation (all response arms).
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.predictions.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.latency.mean()
+    }
+
+    /// Total latency observations (== responses that fed the histogram).
+    pub fn latency_count(&self) -> u64 {
+        self.latency.count()
     }
 
     pub fn snapshot(&self) -> Json {
@@ -98,6 +116,9 @@ impl Metrics {
             ("mean_latency_us", Json::Num(self.mean_latency_us())),
             ("p50_latency_us", Json::Num(self.latency_quantile_us(0.5) as f64)),
             ("p99_latency_us", Json::Num(self.latency_quantile_us(0.99) as f64)),
+            ("latency_us", self.latency.snapshot()),
+            ("batch_size", self.batch_sizes.snapshot()),
+            ("queue_depth", Json::Num(self.queue_depth() as f64)),
         ])
     }
 }
@@ -128,5 +149,59 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.get("requests").unwrap().as_f64(), Some(3.0));
         assert_eq!(s.get("mean_batch_size").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn snapshot_keys_are_golden() {
+        // wire-format stability: dashboards key on these names
+        let s = Metrics::new().snapshot();
+        for key in [
+            "requests",
+            "predictions",
+            "online_updates",
+            "rejected",
+            "errors",
+            "batches",
+            "mean_batch_size",
+            "mean_latency_us",
+            "p50_latency_us",
+            "p99_latency_us",
+            "latency_us",
+            "batch_size",
+            "queue_depth",
+        ] {
+            assert!(s.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn mean_latency_counts_every_arm() {
+        // the old mean divided by the predictions counter, so latency
+        // recorded on rejected/error arms skewed it; now it is the
+        // histogram's own mean
+        let m = Metrics::new();
+        m.observe_latency_us(100);
+        m.observe_latency_us(300); // e.g. a rejected request's latency
+        assert_eq!(m.latency_count(), 2);
+        assert!((m.mean_latency_us() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_depth_gauge() {
+        let m = Metrics::new();
+        assert_eq!(m.queue_depth(), 0);
+        m.set_queue_depth(17);
+        assert_eq!(m.queue_depth(), 17);
+        assert_eq!(
+            m.snapshot().get("queue_depth").unwrap().as_f64(),
+            Some(17.0)
+        );
+    }
+
+    #[test]
+    fn empty_quantile_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile_us(0.5), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
     }
 }

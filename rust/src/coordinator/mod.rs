@@ -6,11 +6,15 @@
 //! incremental&decremental capability is what makes online serving
 //! cheap — §9's online-learning discussion), backpressure, and metrics.
 //!
-//! - [`factory`]  — build measures from [`crate::config::MeasureKind`];
+//! - [`factory`]  — build measures from [`crate::config::MeasureKind`]
+//!   and resolve `[serve.deployment.X]` spec blocks;
 //! - [`state`]    — deployment registry (trained CP per measure);
 //! - [`batcher`]  — bounded queue + deadline-based batch draining;
-//! - [`metrics`]  — counters and latency histograms;
-//! - [`server`]   — the TCP front end and worker loop.
+//! - [`metrics`]  — process-wide counters and latency histograms
+//!   (per-deployment × per-op blocks live in [`crate::obs::metrics`]);
+//! - [`server`]   — the TCP front end and worker loop, threaded with
+//!   [`crate::obs`] stage spans, per-deployment metrics, and online
+//!   validity monitoring (wire reference: PROTOCOL.md).
 
 pub mod batcher;
 pub mod factory;

@@ -1,7 +1,8 @@
 //! The serving front end: JSON-lines over TCP, dynamic batching, worker
-//! pool, online updates, metrics.
+//! pool, online updates, metrics, observability.
 //!
-//! Protocol (one JSON object per line, response mirrors request `id`):
+//! Protocol (one JSON object per line, response mirrors request `id`;
+//! full request/response reference with examples in PROTOCOL.md):
 //!
 //! ```text
 //! -> {"op":"predict","deployment":"knn","x":[...],"epsilon":0.1,"id":1}
@@ -13,7 +14,8 @@
 //! -> {"op":"unlearn","deployment":"knn","index":17}
 //! -> {"op":"observe","tester":"drift","xs":[[...],[...]],"k":7,"seed":1}
 //! <- {"ok":true,"p_values":[null,0.5],"log_martingale":-0.1,"n":2,"alarm":false}
-//! -> {"op":"stats"} | {"op":"list"} | {"op":"ping"} | {"op":"shutdown"}
+//! -> {"op":"stats","deployment":"knn"} | {"op":"trace","limit":100}
+//! -> {"op":"list"} | {"op":"ping"} | {"op":"shutdown"}
 //! ```
 //!
 //! `predict` serves classification deployments, `predict_region` serves
@@ -24,6 +26,16 @@
 //! [`ExchangeabilityTest::observe_batch`]. Unbounded interval endpoints
 //! (±inf) serialize as JSON `null` — the in-tree encoder's
 //! representation for non-finite numbers.
+//!
+//! Observability: `predict` may carry the true label `"y"` (and
+//! `predict_region` its float `"y"`), which feeds the per-deployment
+//! online validity monitor — empirical error rate vs. each tracked
+//! epsilon, set-size / width histograms, p-value uniformity — all
+//! surfaced by `op:"stats"` (optionally filtered by `deployment`)
+//! alongside the global counters, per-op latency blocks, and tester
+//! martingales. `op:"trace"` dumps the stage-span ring in Chrome trace
+//! format. Instrumentation reads clocks and finished outputs only; the
+//! exact scoring path is untouched (EXACTNESS.md).
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -41,13 +53,16 @@ use crate::coordinator::state::{RegionAnswer, Registry};
 use crate::cp::classifier::{forced_from_p_values, set_from_p_values};
 use crate::cp::measure::CpMeasure;
 use crate::measures::KnnOptimized;
+use crate::obs::metrics::{ObsRegistry, OpKind};
+use crate::obs::trace::{self as obs_trace, Stage};
 use crate::online::ExchangeabilityTest;
 use crate::util::json::Json;
 
 /// What a queued job asks for.
 enum JobPayload {
-    /// classification: per-label p-values -> set/forced answer
-    PValues,
+    /// classification: per-label p-values -> set/forced answer; `truth`
+    /// is the optional true label for online validity monitoring
+    PValues { truth: Option<usize> },
     /// regression: exact interval region, optionally also the p-value
     /// of a candidate label
     Region { y: Option<f64> },
@@ -63,10 +78,13 @@ struct Job {
     resp: mpsc::Sender<Json>,
 }
 
-/// The coordinator server: registry + batcher + workers + metrics.
+/// The coordinator server: registry + batcher + workers + metrics +
+/// per-deployment observability.
 pub struct Server {
     pub registry: Arc<Registry>,
     pub metrics: Arc<Metrics>,
+    /// per-deployment × per-op metric blocks and validity monitors
+    pub obs: Arc<ObsRegistry>,
     batcher: Arc<Batcher<Job>>,
     cfg: ServeConfig,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -80,6 +98,12 @@ pub struct Server {
 impl Server {
     /// Start the worker pool (does not bind the socket — see [`serve`]).
     pub fn start(cfg: ServeConfig, registry: Arc<Registry>) -> Server {
+        if cfg.obs.trace {
+            // install the ring (first init wins) and switch spans on
+            obs_trace::init(cfg.obs.ring_capacity);
+            obs_trace::set_enabled(true);
+        }
+        let obs = Arc::new(ObsRegistry::new(cfg.obs.epsilons.clone()));
         let metrics = Arc::new(Metrics::new());
         let batcher = Arc::new(Batcher::new(
             cfg.max_batch,
@@ -95,10 +119,18 @@ impl Server {
                 let b = batcher.clone();
                 let reg = registry.clone();
                 let met = metrics.clone();
+                let ob = obs.clone();
                 std::thread::spawn(move || {
-                    while let Some(batch) = b.next_batch() {
-                        met.record_batch(batch.len());
-                        Self::run_batch(&reg, &met, batch);
+                    while let Some(d) = b.next_batch_stats() {
+                        met.record_batch(d.items.len());
+                        met.set_queue_depth(d.depth_after);
+                        obs_trace::record_complete(
+                            Stage::BatchAssemble,
+                            d.started,
+                            d.assembled,
+                            [d.items.len() as u64, d.depth_after as u64, 0, 0],
+                        );
+                        Self::run_batch(&reg, &met, &ob, d.items);
                     }
                 })
             })
@@ -106,6 +138,7 @@ impl Server {
         Server {
             registry,
             metrics,
+            obs,
             batcher,
             cfg,
             workers,
@@ -124,7 +157,12 @@ impl Server {
     /// differ per job because only the sweep depends on them). Workers
     /// each drain their own batch, so the existing pool still fans
     /// chunks out across cores.
-    fn run_batch(reg: &Registry, met: &Metrics, batch: Vec<Job>) {
+    fn run_batch(
+        reg: &Registry,
+        met: &Metrics,
+        obs: &ObsRegistry,
+        batch: Vec<Job>,
+    ) {
         let mut groups: Vec<(String, bool, Vec<Job>)> = Vec::new();
         for job in batch {
             let is_region = matches!(job.payload, JobPayload::Region { .. });
@@ -147,7 +185,20 @@ impl Server {
         // labels (the main batch win) is fully preserved.
         const LOCK_CHUNK: usize = 16;
         for (dep, is_region, jobs) in groups {
+            let dep_obs = obs.get(&dep);
+            dep_obs.record_batch(jobs.len());
             for chunk in jobs.chunks(LOCK_CHUNK) {
+                if obs_trace::enabled() {
+                    // queue-wait spans, retroactive: enqueue -> scoring
+                    for job in chunk {
+                        obs_trace::record_complete(
+                            Stage::QueueWait,
+                            job.enqueued,
+                            job.enqueued.elapsed(),
+                            [chunk.len() as u64, 0, 0, 0],
+                        );
+                    }
+                }
                 let xs: Vec<&[f64]> =
                     chunk.iter().map(|j| j.x.as_slice()).collect();
                 let outs: Result<Vec<Json>> = if is_region {
@@ -156,12 +207,24 @@ impl Server {
                         .iter()
                         .map(|j| match j.payload {
                             JobPayload::Region { y } => y,
-                            JobPayload::PValues => None,
+                            JobPayload::PValues { .. } => None,
                         })
                         .collect();
                     reg.with(&dep, |d| d.region_rows(&xs, &eps, &ys))
                         .and_then(|r| r)
-                        .map(|rows| rows.iter().map(region_json).collect())
+                        .map(|rows| {
+                            rows.iter()
+                                .map(|ans| {
+                                    // width/p-at-y feed the validity
+                                    // monitor from finished outputs only
+                                    dep_obs.validity.record_region(
+                                        ans.region.total_width(),
+                                        ans.p_at_y,
+                                    );
+                                    region_json(ans)
+                                })
+                                .collect()
+                        })
                 } else {
                     reg.with(&dep, |d| -> Result<Vec<Vec<f64>>> {
                         if d.is_regression() {
@@ -176,7 +239,16 @@ impl Server {
                     .map(|rows| {
                         rows.iter()
                             .zip(chunk)
-                            .map(|(ps, job)| predict_json(ps, job.eps))
+                            .map(|(ps, job)| {
+                                let truth = match job.payload {
+                                    JobPayload::PValues { truth } => truth,
+                                    JobPayload::Region { .. } => None,
+                                };
+                                dep_obs
+                                    .validity
+                                    .record_classification(ps, truth);
+                                predict_json(ps, job.eps)
+                            })
                             .collect()
                     })
                 };
@@ -220,7 +292,8 @@ impl Server {
             Some("observe") => self.handle_observe(req),
             Some("learn") => self.handle_learn(req),
             Some("unlearn") => self.handle_unlearn(req),
-            Some("stats") => self.metrics.snapshot(),
+            Some("stats") => self.handle_stats(req),
+            Some("trace") => self.handle_trace(req),
             Some("list") => Json::obj(vec![(
                 "deployments",
                 Json::Arr(
@@ -245,35 +318,64 @@ impl Server {
     }
 
     /// Push one job through the batcher and wait for its answer.
+    ///
+    /// EVERY exit arm records latency — success and error into the
+    /// per-deployment op block, and additionally into the global
+    /// histogram on the arms the worker never sees (rejected, closed,
+    /// timed out). Without those arms the tail quantiles would be
+    /// survivorship-biased exactly when the server sheds load.
     fn enqueue(
         &self,
         dep: &str,
+        kind: OpKind,
         x: Vec<f64>,
         eps: f64,
         payload: JobPayload,
     ) -> Json {
+        let dep_obs = self.obs.get(dep);
+        let op = dep_obs.op(kind);
         let (tx, rx) = mpsc::channel();
+        let start = Instant::now();
         let job = Job {
             deployment: dep.to_string(),
             x,
             eps,
             payload,
-            enqueued: Instant::now(),
+            enqueued: start,
             resp: tx,
         };
         match self.batcher.push(job) {
             Ok(()) => match rx.recv_timeout(Duration::from_secs(60)) {
-                Ok(j) => j,
+                Ok(j) => {
+                    let us = start.elapsed().as_micros() as u64;
+                    if j.get("ok").and_then(Json::as_bool) == Some(false) {
+                        op.record_error(us);
+                    } else {
+                        op.record_ok(us);
+                    }
+                    j
+                }
                 Err(_) => {
+                    let us = start.elapsed().as_micros() as u64;
                     self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.observe_latency_us(us);
+                    op.record_error(us);
                     err_json("prediction timed out")
                 }
             },
             Err(PushError::Full) => {
+                let us = start.elapsed().as_micros() as u64;
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.observe_latency_us(us);
+                op.record_rejected(us);
                 err_json("overloaded (backpressure)")
             }
-            Err(PushError::Closed) => err_json("shutting down"),
+            Err(PushError::Closed) => {
+                let us = start.elapsed().as_micros() as u64;
+                self.metrics.observe_latency_us(us);
+                op.record_error(us);
+                err_json("shutting down")
+            }
         }
     }
 
@@ -288,7 +390,12 @@ impl Server {
             .get("epsilon")
             .and_then(Json::as_f64)
             .unwrap_or(self.cfg.default_epsilon);
-        self.enqueue(dep, x, eps, JobPayload::PValues)
+        // optional true label: feeds the online validity monitor only,
+        // never the prediction itself
+        let truth = req.get("y").and_then(Json::as_usize);
+        self.enqueue(dep, OpKind::Predict, x, eps, JobPayload::PValues {
+            truth,
+        })
     }
 
     /// Regression prediction: exact interval region (optionally with the
@@ -305,7 +412,9 @@ impl Server {
             .and_then(Json::as_f64)
             .unwrap_or(self.cfg.default_epsilon);
         let y = req.get("y").and_then(Json::as_f64);
-        self.enqueue(dep, x, eps, JobPayload::Region { y })
+        self.enqueue(dep, OpKind::PredictRegion, x, eps, JobPayload::Region {
+            y,
+        })
     }
 
     /// Feed observations to a named exchangeability tester (created on
@@ -346,6 +455,8 @@ impl Server {
         }
         let k = req.get("k").and_then(Json::as_usize).unwrap_or(7).max(1);
         let seed = req.get("seed").and_then(Json::as_usize).unwrap_or(1);
+        let _span =
+            obs_trace::span_args(Stage::Observe, [rows.len() as u64, 0, 0, 0]);
         // LOCK-ORDER: coordinator.testers — exclusive while the tester
         // observes the batch; never held with coordinator.registry.
         let mut guard = self.testers.write().unwrap();
@@ -392,6 +503,8 @@ impl Server {
         ) else {
             return err_json("learn needs deployment, x, y");
         };
+        let start = Instant::now();
+        let _span = obs_trace::span(Stage::Learn);
         // y routes on the deployment kind: float target for regression,
         // non-negative integer label for classification
         let res = self.registry.with_mut(dep, |d| {
@@ -406,8 +519,12 @@ impl Server {
                 d.learn(&x, y as usize).map(|_| (d.n_train(), d.version))
             }
         });
+        let op = self.obs.get(dep);
+        let op = op.op(OpKind::Learn);
+        let us = start.elapsed().as_micros() as u64;
         match res {
             Ok(Ok((n, v))) => {
+                op.record_ok(us);
                 self.metrics.online_updates.fetch_add(1, Ordering::Relaxed);
                 Json::obj(vec![
                     ("ok", Json::Bool(true)),
@@ -415,7 +532,10 @@ impl Server {
                     ("version", Json::Num(v as f64)),
                 ])
             }
-            Ok(Err(e)) | Err(e) => err_json(&e.to_string()),
+            Ok(Err(e)) | Err(e) => {
+                op.record_error(us);
+                err_json(&e.to_string())
+            }
         }
     }
 
@@ -426,10 +546,17 @@ impl Server {
         ) else {
             return err_json("unlearn needs deployment, index");
         };
-        match self.registry.with_mut(dep, |d| d.unlearn(idx).map(|_| {
+        let start = Instant::now();
+        let _span = obs_trace::span(Stage::Unlearn);
+        let res = self.registry.with_mut(dep, |d| d.unlearn(idx).map(|_| {
             (d.n_train(), d.version)
-        })) {
+        }));
+        let op = self.obs.get(dep);
+        let op = op.op(OpKind::Unlearn);
+        let us = start.elapsed().as_micros() as u64;
+        match res {
             Ok(Ok((n, v))) => {
+                op.record_ok(us);
                 self.metrics.online_updates.fetch_add(1, Ordering::Relaxed);
                 Json::obj(vec![
                     ("ok", Json::Bool(true)),
@@ -437,8 +564,107 @@ impl Server {
                     ("version", Json::Num(v as f64)),
                 ])
             }
-            Ok(Err(e)) | Err(e) => err_json(&e.to_string()),
+            Ok(Err(e)) | Err(e) => {
+                op.record_error(us);
+                err_json(&e.to_string())
+            }
         }
+    }
+
+    /// `op:"stats"`: the global metrics snapshot, augmented with the
+    /// live batcher depth, the per-deployment observability blocks
+    /// (optionally narrowed by `"deployment"`), the online testers'
+    /// martingale state, and the tracer's status.
+    fn handle_stats(&self, req: &Json) -> Json {
+        let mut out = self.metrics.snapshot();
+        let Json::Obj(m) = &mut out else {
+            return out;
+        };
+        m.insert(
+            "queue_depth".into(),
+            Json::Num(self.batcher.depth() as f64),
+        );
+        let deployments = match req.get("deployment").and_then(Json::as_str) {
+            Some(name) => {
+                let mut only = std::collections::BTreeMap::new();
+                if let Some(d) = self.obs.peek(name) {
+                    only.insert(name.to_string(), d.snapshot());
+                }
+                Json::Obj(only)
+            }
+            None => self.obs.snapshot(),
+        };
+        m.insert("deployments".into(), deployments);
+        m.insert(
+            "epsilons".into(),
+            Json::Arr(
+                self.obs.epsilons().iter().map(|&e| Json::Num(e)).collect(),
+            ),
+        );
+        let testers = {
+            // LOCK-ORDER: coordinator.testers — read-only martingale
+            // snapshot; no other lock taken while held.
+            let guard = self.testers.read().unwrap();
+            let mut map = std::collections::BTreeMap::new();
+            for (name, t) in guard.iter() {
+                let lm = t.log_martingale();
+                map.insert(
+                    name.clone(),
+                    Json::obj(vec![
+                        ("n", Json::Num(t.seen() as f64)),
+                        ("log_martingale", Json::Num(lm)),
+                        ("log_max_power", Json::Num(t.log_max_power())),
+                        ("alarm", Json::Bool(lm > 100f64.ln())),
+                    ]),
+                );
+            }
+            Json::Obj(map)
+        };
+        m.insert("testers".into(), testers);
+        let trace = match obs_trace::tracer() {
+            Some(t) => Json::obj(vec![
+                ("enabled", Json::Bool(obs_trace::enabled())),
+                ("recorded", Json::Num(t.ring().recorded() as f64)),
+                ("capacity", Json::Num(t.ring().capacity() as f64)),
+            ]),
+            None => Json::obj(vec![
+                ("enabled", Json::Bool(false)),
+                ("recorded", Json::Num(0.0)),
+                ("capacity", Json::Num(0.0)),
+            ]),
+        };
+        m.insert("trace".into(), trace);
+        out
+    }
+
+    /// `op:"trace"`: dump the span ring in Chrome trace format
+    /// (`chrome://tracing` / Perfetto compatible), newest-`limit`
+    /// events when `"limit"` is given.
+    fn handle_trace(&self, req: &Json) -> Json {
+        let limit = req.get("limit").and_then(Json::as_usize);
+        let events = match obs_trace::tracer() {
+            Some(t) => {
+                let mut evs = t.ring().snapshot();
+                if let Some(n) = limit {
+                    if evs.len() > n {
+                        evs.drain(..evs.len() - n);
+                    }
+                }
+                evs
+            }
+            None => Vec::new(),
+        };
+        let mut out = obs_trace::chrome_trace_json(&events);
+        if let Json::Obj(m) = &mut out {
+            m.insert("enabled".into(), Json::Bool(obs_trace::enabled()));
+            m.insert(
+                "recorded".into(),
+                Json::Num(obs_trace::tracer().map_or(0, |t| {
+                    t.ring().recorded()
+                }) as f64),
+            );
+        }
+        out
     }
 
     pub fn stopping(&self) -> bool {
@@ -545,8 +771,15 @@ fn handle_conn(server: Arc<Server>, stream: TcpStream) -> Result<()> {
             Ok(req) => server.handle(&req),
             Err(e) => err_json(&format!("bad json: {e}")),
         };
-        writer.write_all(resp.encode().as_bytes())?;
-        writer.write_all(b"\n")?;
+        {
+            let encoded = resp.encode();
+            let _span = obs_trace::span_args(
+                Stage::RespWrite,
+                [encoded.len() as u64, 0, 0, 0],
+            );
+            writer.write_all(encoded.as_bytes())?;
+            writer.write_all(b"\n")?;
+        }
         if server.stopping() {
             break;
         }
@@ -758,5 +991,122 @@ mod tests {
         assert_eq!(deps.len(), 1);
         let stats = srv.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
         assert!(stats.get("requests").is_some());
+    }
+
+    #[test]
+    fn stats_reports_per_deployment_observability() {
+        let srv = test_server();
+        let x = vec![0.0; 30];
+        // labeled predict: "y" feeds the validity monitor
+        let req = Json::obj(vec![
+            ("op", Json::Str("predict".into())),
+            ("deployment", Json::Str("knn".into())),
+            ("x", Json::from_f64_slice(&x)),
+            ("y", Json::Num(1.0)),
+        ]);
+        assert!(srv.handle(&req).get("p_values").is_some());
+        let stats = srv.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+        for key in ["deployments", "epsilons", "testers", "trace", "queue_depth"]
+        {
+            assert!(stats.get(key).is_some(), "missing {key}");
+        }
+        let knn = stats.get("deployments").unwrap().get("knn").unwrap();
+        let predict = knn.get("ops").unwrap().get("predict").unwrap();
+        assert_eq!(predict.get("requests").unwrap().as_f64(), Some(1.0));
+        assert_eq!(predict.get("errors").unwrap().as_f64(), Some(0.0));
+        let validity = knn.get("validity").unwrap();
+        let tracks = validity.get("per_epsilon").unwrap().as_arr().unwrap();
+        assert!(!tracks.is_empty(), "default epsilons must be tracked");
+        assert_eq!(tracks[0].get("labeled").unwrap().as_f64(), Some(1.0));
+        // filter narrows to the named deployment; unknown names are empty
+        let one = srv.handle(
+            &Json::parse(r#"{"op":"stats","deployment":"knn"}"#).unwrap(),
+        );
+        assert!(one.get("deployments").unwrap().get("knn").is_some());
+        let none = srv.handle(
+            &Json::parse(r#"{"op":"stats","deployment":"nope"}"#).unwrap(),
+        );
+        assert!(none.get("deployments").unwrap().get("nope").is_none());
+    }
+
+    #[test]
+    fn rejected_and_error_arms_record_latency() {
+        // queue_depth 0 => every push is rejected with backpressure
+        let ds = make_classification(
+            &ClassificationSpec {
+                n_samples: 40,
+                ..Default::default()
+            },
+            1,
+        );
+        let reg = Arc::new(Registry::new());
+        reg.insert(Deployment::train(
+            "knn",
+            MeasureKind::SimplifiedKnn,
+            &MeasureConfig {
+                k: 3,
+                ..Default::default()
+            },
+            &ds,
+            None,
+        ));
+        let srv = Arc::new(Server::start(
+            ServeConfig {
+                workers: 1,
+                queue_depth: 0,
+                ..Default::default()
+            },
+            reg,
+        ));
+        let req = Json::parse(
+            r#"{"op":"predict","deployment":"knn","x":[0,0,0]}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(srv.metrics.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            srv.metrics.latency_count(),
+            1,
+            "rejected arm must feed the latency histogram"
+        );
+        let op = srv.obs.get("knn");
+        let op = op.op(OpKind::Predict);
+        assert_eq!(op.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(op.latency.count(), 1);
+    }
+
+    #[test]
+    fn trace_op_reports_ring_status() {
+        let srv = test_server();
+        let resp = srv.handle(&Json::parse(r#"{"op":"trace"}"#).unwrap());
+        // well-formed whether or not another test installed the global
+        // tracer: a traceEvents array plus status fields, always
+        assert!(resp.get("traceEvents").unwrap().as_arr().is_some());
+        assert!(resp.get("enabled").unwrap().as_bool().is_some());
+        assert!(resp.get("recorded").unwrap().as_f64().is_some());
+        let limited = srv.handle(
+            &Json::parse(r#"{"op":"trace","limit":2}"#).unwrap(),
+        );
+        assert!(
+            limited.get("traceEvents").unwrap().as_arr().unwrap().len() <= 2
+        );
+    }
+
+    #[test]
+    fn learn_failure_counts_in_op_block() {
+        let srv = test_server();
+        // float label on a classification deployment is rejected
+        let req = Json::parse(
+            r#"{"op":"learn","deployment":"knn","x":[0,0,0],"y":0.5}"#,
+        )
+        .unwrap();
+        let resp = srv.handle(&req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        let dep = srv.obs.get("knn");
+        let learn = dep.op(OpKind::Learn);
+        assert_eq!(learn.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(learn.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(learn.latency.count(), 1, "error arm feeds latency");
     }
 }

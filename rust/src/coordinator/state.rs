@@ -157,6 +157,10 @@ impl Deployment {
         };
         assert_eq!(xs.len(), eps.len());
         assert_eq!(xs.len(), ys.len());
+        let _span = crate::obs::trace::span_args(
+            crate::obs::Stage::RegionSweep,
+            [xs.len() as u64, 0, 0, 0],
+        );
         Ok(regressor
             .coefficients_batch(xs)
             .into_iter()

@@ -18,12 +18,23 @@ pub fn coverage(p_matrix: &[Vec<f64>], truth: &[usize], eps: f64) -> f64 {
     hits as f64 / truth.len() as f64
 }
 
+/// Size of one prediction set at significance `eps` (labels with
+/// p > eps). The single-row primitive behind [`avg_set_size`], shared
+/// with the online validity monitor (`obs::validity`).
+pub fn set_size(ps: &[f64], eps: f64) -> usize {
+    ps.iter().filter(|&&p| p > eps).count()
+}
+
+/// Is the true label inside the prediction set at significance `eps`?
+/// Single-row primitive behind [`coverage`]; an out-of-range `truth`
+/// counts as not covered.
+pub fn covered(ps: &[f64], truth: usize, eps: f64) -> bool {
+    ps.get(truth).is_some_and(|&p| p > eps)
+}
+
 /// Average prediction-set size at significance `eps`.
 pub fn avg_set_size(p_matrix: &[Vec<f64>], eps: f64) -> f64 {
-    let total: usize = p_matrix
-        .iter()
-        .map(|ps| ps.iter().filter(|&&p| p > eps).count())
-        .sum();
+    let total: usize = p_matrix.iter().map(|ps| set_size(ps, eps)).sum();
     total as f64 / p_matrix.len() as f64
 }
 

@@ -28,8 +28,16 @@ pub fn p_value_rows<M: CpMeasure + ?Sized>(
         return xs.iter().map(|_| Vec::new()).collect();
     }
     let labels: Vec<Label> = (0..n_labels).collect();
-    measure
-        .scores_batch(xs, &labels)
+    // Tracing spans time the two stages; they read the clock and the
+    // finished score buffers only — the float path is untouched.
+    let dims = [xs.len() as u64, n_labels as u64, 0, 0];
+    let scores = {
+        let _span =
+            crate::obs::trace::span_args(crate::obs::Stage::MeasureScores, dims);
+        measure.scores_batch(xs, &labels)
+    };
+    let _span = crate::obs::trace::span_args(crate::obs::Stage::PValueAgg, dims);
+    scores
         .chunks(n_labels)
         .map(|row| row.iter().map(p_value).collect())
         .collect()

@@ -32,6 +32,10 @@
 //!   bucketing, padding/masking, executable cache.
 //! - [`coordinator`] — L3 serving system: request router, dynamic
 //!   batcher, online learn/unlearn state management, metrics.
+//! - [`obs`] — serving observability: stage-level tracing (lock-free
+//!   span ring, Chrome-trace dump), per-deployment metrics, online
+//!   validity monitoring. Provably off the exact-value path
+//!   (EXACTNESS.md).
 //! - [`bench_harness`] — drivers regenerating every table and figure of
 //!   the paper's evaluation (see DESIGN.md §4).
 
@@ -43,6 +47,7 @@ pub mod cp;
 pub mod data;
 pub mod linalg;
 pub mod measures;
+pub mod obs;
 pub mod online;
 pub mod regression;
 pub mod runtime;

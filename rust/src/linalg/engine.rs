@@ -71,6 +71,30 @@ pub trait DistEngine: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
+/// `DistKernel` trace span for one batch matrix launch, or `None` when
+/// tracing is off (one relaxed load). args = [m, n, p, engine_id] per
+/// the [`crate::obs::Stage::DistKernel`] contract. Shared by the native
+/// engines here and the PJRT engines in `runtime::{pjrt,stub}`.
+pub(crate) fn kernel_span(
+    engine: u64,
+    xs: &[f64],
+    rows: &[f64],
+    p: usize,
+) -> Option<crate::obs::trace::SpanGuard> {
+    if p == 0 {
+        return None;
+    }
+    crate::obs::trace::span_args(
+        crate::obs::Stage::DistKernel,
+        [
+            (xs.len() / p) as u64,
+            (rows.len() / p) as u64,
+            p as u64,
+            engine,
+        ],
+    )
+}
+
 /// Hand-written Rust loops (default backend).
 #[derive(Default, Clone, Copy, Debug)]
 pub struct NativeEngine;
@@ -81,10 +105,14 @@ impl DistEngine for NativeEngine {
     }
 
     fn pairwise_sq(&self, a: &[f64], p: usize) -> Vec<f64> {
+        let _span =
+            kernel_span(crate::obs::trace::engine_id::NATIVE, a, a, p);
         distance::pairwise_sq(a, p)
     }
 
     fn dist_matrix_sq(&self, xs: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        let _span =
+            kernel_span(crate::obs::trace::engine_id::NATIVE, xs, rows, p);
         distance::dist_matrix_sq_into(xs, rows, p, out);
     }
 
@@ -108,10 +136,14 @@ impl DistEngine for ThreadedNativeEngine {
     }
 
     fn pairwise_sq(&self, a: &[f64], p: usize) -> Vec<f64> {
+        let _span =
+            kernel_span(crate::obs::trace::engine_id::THREADED, a, a, p);
         distance::pairwise_sq(a, p)
     }
 
     fn dist_matrix_sq(&self, xs: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        let _span =
+            kernel_span(crate::obs::trace::engine_id::THREADED, xs, rows, p);
         distance::dist_matrix_sq_into_workers(xs, rows, p, self.workers, out);
     }
 

@@ -19,7 +19,9 @@ use anyhow::{bail, Context, Result};
 
 use exact_cp::bench_harness::{self, ALL_EXPERIMENTS};
 use exact_cp::config::{Config, MeasureKind, RegressorKind};
-use exact_cp::coordinator::factory::{build_measure, build_standard_measure, select_engine};
+use exact_cp::coordinator::factory::{
+    build_measure, build_standard_measure, deployment_from_spec, select_engine,
+};
 use exact_cp::coordinator::server::{serve, Server};
 use exact_cp::coordinator::state::{Deployment, Registry};
 use exact_cp::cp::pvalue::p_value;
@@ -32,7 +34,7 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: [&str; 3] = ["paper-scale", "use-pjrt", "help"];
+const BOOL_FLAGS: [&str; 4] = ["paper-scale", "use-pjrt", "help", "trace"];
 
 impl Args {
     fn parse(argv: &[String]) -> Args {
@@ -132,6 +134,11 @@ USAGE:
       ids: fig2 fig3 fig4 fig5 fig6 table1 table2 table3 fuzziness iid
   repro serve   [--addr HOST:PORT] [--n N] [--measures knn,kde,...]
                 [--regressors knn-reg,ridge,...] [--use-pjrt] [--config F]
+                [--trace] [--trace-out FILE]
+      --trace enables the stage-span ring (dump via op \"trace\");
+      --trace-out additionally streams spans to FILE as JSON lines;
+      [serve.deployment.X] config blocks add deployments with their
+      own hyperparameters (kind, k, rho, h, ...)
   repro predict [--measure M] [--n N] [--eps E] [--use-pjrt]
   repro artifacts [--dir DIR]
   repro selfcheck
@@ -218,9 +225,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
             n_deployments += 1;
         }
     }
+    // [serve.deployment.X] config blocks: named deployments with their
+    // own kind and hyperparameters (satellite of the obs work: lets two
+    // k-NN deployments serve different k / ridge rho side by side)
+    if !cfg.serve.deployments.is_empty() {
+        let rds = make_regression(
+            &RegressionSpec {
+                n_samples: n,
+                n_features: 10,
+                n_informative: 5,
+                noise: 5.0,
+            },
+            1,
+        );
+        for spec in &cfg.serve.deployments {
+            println!(
+                "training deployment {} (kind {}) on n={n}...",
+                spec.name, spec.kind
+            );
+            registry.insert(deployment_from_spec(
+                spec,
+                &ds,
+                &rds,
+                Some(engine.clone()),
+            )?);
+            n_deployments += 1;
+        }
+    }
     let mut serve_cfg = cfg.serve.clone();
     serve_cfg.addr = addr.clone();
+    if args.has("trace") || args.get("trace-out").is_some() {
+        serve_cfg.obs.trace = true;
+    }
     let server = Arc::new(Server::start(serve_cfg, registry));
+    // spawned after Server::start so the ring exists; dropped (final
+    // drain + join) when serve() returns
+    let _trace_writer = match args.get("trace-out") {
+        Some(path) => {
+            let path = std::path::Path::new(path);
+            Some(
+                exact_cp::obs::trace::JsonlWriter::spawn(path).with_context(
+                    || format!("creating trace file {}", path.display()),
+                )?,
+            )
+        }
+        None => None,
+    };
     let listener = std::net::TcpListener::bind(&addr)
         .with_context(|| format!("binding {addr}"))?;
     println!(

@@ -1,0 +1,324 @@
+//! Fixed-bucket atomic histograms — the storage primitive behind every
+//! observability metric (latency, batch size, set size, interval width,
+//! p-value uniformity).
+//!
+//! All updates are relaxed atomics on preallocated buckets: `observe` is
+//! wait-free and never allocates, so it is safe to call from the serving
+//! hot path. The running `sum` is kept as an `f64` bit pattern updated
+//! by CAS — this is a *monitoring* aggregate, never compared bitwise
+//! against anything, so the nondeterministic accumulation order under
+//! concurrency is acceptable (and `obs/` is deliberately outside the
+//! EXACT-critical module list; see EXACTNESS.md).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// A fixed-bucket histogram with atomic counters.
+///
+/// `bounds[i]` is the inclusive upper bound of bucket `i`; the last
+/// bound should be `f64::INFINITY` so every value (including
+/// `u64::MAX as f64`) lands somewhere — `observe` clamps to the last
+/// bucket regardless, so a histogram without an infinite tail still
+/// never drops a sample.
+pub struct AtomicHist {
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    /// total observation count (== sum of bucket counts)
+    n: AtomicU64,
+    /// running sum of observed values, stored as f64 bits
+    sum_bits: AtomicU64,
+}
+
+/// CAS-add a value into an f64 stored as bits in an `AtomicU64`.
+fn add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(
+            cur,
+            new,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+impl AtomicHist {
+    /// Build from explicit bucket upper bounds (ascending).
+    pub fn new(bounds: Vec<f64>) -> Self {
+        assert!(!bounds.is_empty());
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "bounds must be strictly ascending"
+        );
+        let counts = bounds.iter().map(|_| AtomicU64::new(0)).collect();
+        AtomicHist {
+            bounds,
+            counts,
+            n: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Log-spaced microsecond latency buckets (the coordinator default),
+    /// with an infinite overflow tail.
+    pub fn latency_us() -> Self {
+        Self::new(vec![
+            50.0,
+            100.0,
+            250.0,
+            500.0,
+            1_000.0,
+            2_500.0,
+            5_000.0,
+            10_000.0,
+            25_000.0,
+            100_000.0,
+            1_000_000.0,
+            f64::INFINITY,
+        ])
+    }
+
+    /// Linear integer buckets `1..=max` plus an overflow tail — batch
+    /// sizes, prediction-set sizes, queue depths.
+    pub fn linear(max: usize) -> Self {
+        let mut bounds: Vec<f64> = (0..=max).map(|i| i as f64).collect();
+        bounds.push(f64::INFINITY);
+        Self::new(bounds)
+    }
+
+    /// `k` uniform buckets over `[0, 1]` — p-value uniformity tracking.
+    pub fn unit_interval(k: usize) -> Self {
+        assert!(k >= 1);
+        let bounds = (1..=k).map(|i| i as f64 / k as f64).collect();
+        Self::new(bounds)
+    }
+
+    /// Log-spaced width buckets for regression interval widths.
+    pub fn widths() -> Self {
+        Self::new(vec![
+            0.01,
+            0.1,
+            0.5,
+            1.0,
+            2.0,
+            5.0,
+            10.0,
+            50.0,
+            100.0,
+            1_000.0,
+            f64::INFINITY,
+        ])
+    }
+
+    /// Record one observation (wait-free, allocation-free).
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len() - 1);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+        add_f64(&self.sum_bits, v);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observed values.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Approximate quantile: the upper bound of the bucket containing
+    /// the q-th sample. Returns 0 for an empty histogram. An infinite
+    /// tail bucket reports the last *finite* bound (the histogram's
+    /// resolution limit) rather than `inf`, so JSON snapshots stay
+    /// numeric.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().copied().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.finite_bound(i);
+            }
+        }
+        self.finite_bound(self.bounds.len() - 1)
+    }
+
+    /// Bound of bucket `i`, substituting the largest finite bound for an
+    /// infinite tail.
+    fn finite_bound(&self, i: usize) -> f64 {
+        let b = self.bounds[i];
+        if b.is_finite() {
+            b
+        } else if i > 0 {
+            self.bounds[i - 1]
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-bucket counts (for snapshots and tests).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Bucket upper bounds.
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// JSON snapshot with stable keys: `count`, `mean`, `p50`, `p99`,
+    /// `bounds`, `counts` (infinite bounds serialize as JSON null).
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(self.quantile(0.5))),
+            ("p99", Json::Num(self.quantile(0.99))),
+            ("bounds", Json::from_f64_slice(&self.bounds)),
+            (
+                "counts",
+                Json::Arr(
+                    self.bucket_counts()
+                        .into_iter()
+                        .map(|c| Json::Num(c as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero() {
+        let h = AtomicHist::latency_us();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn overflow_bucket_catches_u64_max() {
+        let h = AtomicHist::latency_us();
+        h.observe(u64::MAX as f64);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 2);
+        let counts = h.bucket_counts();
+        assert_eq!(*counts.last().unwrap(), 2, "tail bucket holds both");
+        // quantile reports the largest finite bound, not inf
+        assert_eq!(h.quantile(0.99), 1_000_000.0);
+    }
+
+    #[test]
+    fn no_infinite_tail_still_never_drops() {
+        let h = AtomicHist::new(vec![1.0, 2.0]);
+        h.observe(100.0);
+        assert_eq!(h.bucket_counts(), vec![0, 1]);
+        assert_eq!(h.quantile(0.5), 2.0);
+    }
+
+    #[test]
+    fn quantiles_match_reference() {
+        let h = AtomicHist::latency_us();
+        for _ in 0..90 {
+            h.observe(80.0); // bucket <= 100
+        }
+        for _ in 0..10 {
+            h.observe(400_000.0); // bucket <= 1s
+        }
+        assert_eq!(h.quantile(0.5), 100.0);
+        assert_eq!(h.quantile(0.99), 1_000_000.0);
+        assert_eq!(h.count(), 100);
+        let want_mean = (90.0 * 80.0 + 10.0 * 400_000.0) / 100.0;
+        assert!((h.mean() - want_mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_and_unit_builders() {
+        let h = AtomicHist::linear(4);
+        h.observe(0.0);
+        h.observe(3.0);
+        h.observe(99.0);
+        assert_eq!(h.bucket_counts(), vec![1, 0, 0, 1, 0, 1]);
+        let u = AtomicHist::unit_interval(4);
+        u.observe(0.1);
+        u.observe(0.9);
+        assert_eq!(u.bucket_counts(), vec![1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn concurrent_relaxed_increments_all_land() {
+        let h = Arc::new(AtomicHist::latency_us());
+        let threads = 4;
+        let per = 5_000;
+        // THREADS: test-only — `threads` writers observe concurrently,
+        // all joined below.
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        h.observe(((t * per + i) % 900) as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), (threads * per) as u64);
+        let total: u64 = h.bucket_counts().iter().sum();
+        assert_eq!(total, (threads * per) as u64);
+        // the CAS'd sum saw every observation exactly once
+        let want: f64 = (0..threads * per).map(|i| (i % 900) as f64).sum();
+        assert!((h.sum() - want).abs() < 1e-6, "{} vs {want}", h.sum());
+    }
+
+    #[test]
+    fn snapshot_keys_are_stable() {
+        let h = AtomicHist::linear(2);
+        h.observe(1.0);
+        let s = h.snapshot();
+        for key in ["count", "mean", "p50", "p99", "bounds", "counts"] {
+            assert!(s.get(key).is_some(), "missing {key}");
+        }
+        // infinite bound serializes as null, finite ones as numbers
+        let bounds = s.get("bounds").unwrap().as_arr().unwrap();
+        assert!(matches!(bounds.last(), Some(Json::Null)));
+    }
+}

@@ -1,0 +1,288 @@
+//! Per-deployment × per-op metric blocks.
+//!
+//! The coordinator keeps one global [`crate::coordinator::metrics::Metrics`]
+//! for process-wide counters; this registry splits the interesting ones
+//! (request counts, latency histograms, batch sizes, validity) by
+//! deployment and wire op, so `op:"stats"` can answer "where does
+//! deployment X's p99 come from" instead of one blended number.
+//!
+//! Blocks are created lazily on first touch and live for the process:
+//! the registry RwLock (`obs.deployments` in the lock-rank table) is
+//! held only for the HashMap probe — every metric update happens on an
+//! `Arc`'d block after the guard drops.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::obs::hist::AtomicHist;
+use crate::obs::validity::ValidityMonitor;
+use crate::util::json::Json;
+
+/// Wire ops that get their own metric block per deployment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Predict = 0,
+    PredictRegion = 1,
+    Learn = 2,
+    Unlearn = 3,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 4] = [
+        OpKind::Predict,
+        OpKind::PredictRegion,
+        OpKind::Learn,
+        OpKind::Unlearn,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Predict => "predict",
+            OpKind::PredictRegion => "predict_region",
+            OpKind::Learn => "learn",
+            OpKind::Unlearn => "unlearn",
+        }
+    }
+
+    pub fn from_op(op: &str) -> Option<OpKind> {
+        match op {
+            "predict" => Some(OpKind::Predict),
+            "predict_region" => Some(OpKind::PredictRegion),
+            "learn" => Some(OpKind::Learn),
+            "unlearn" => Some(OpKind::Unlearn),
+            _ => None,
+        }
+    }
+}
+
+/// Counters + latency histogram for one (deployment, op) pair. Every
+/// response arm feeds the histogram — success, error AND rejected — so
+/// tail quantiles are not survivorship-biased under backpressure.
+pub struct OpMetrics {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub rejected: AtomicU64,
+    pub latency: AtomicHist,
+}
+
+impl OpMetrics {
+    fn new() -> OpMetrics {
+        OpMetrics {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            latency: AtomicHist::latency_us(),
+        }
+    }
+
+    /// Successful response after `us` microseconds.
+    pub fn record_ok(&self, us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latency.observe(us as f64);
+    }
+
+    /// Error response after `us` microseconds.
+    pub fn record_error(&self, us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        self.latency.observe(us as f64);
+    }
+
+    /// Backpressure rejection after `us` microseconds.
+    pub fn record_rejected(&self, us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.latency.observe(us as f64);
+    }
+
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "requests",
+                Json::Num(self.requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "errors",
+                Json::Num(self.errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "rejected",
+                Json::Num(self.rejected.load(Ordering::Relaxed) as f64),
+            ),
+            ("latency_us", self.latency.snapshot()),
+        ])
+    }
+}
+
+/// All observability state for one deployment.
+pub struct DeploymentObs {
+    ops: [OpMetrics; 4],
+    /// Size of each scored sub-batch routed to this deployment.
+    pub batch_sizes: AtomicHist,
+    pub validity: ValidityMonitor,
+}
+
+impl DeploymentObs {
+    fn new(epsilons: &[f64]) -> DeploymentObs {
+        DeploymentObs {
+            ops: [
+                OpMetrics::new(),
+                OpMetrics::new(),
+                OpMetrics::new(),
+                OpMetrics::new(),
+            ],
+            batch_sizes: AtomicHist::linear(64),
+            validity: ValidityMonitor::new(epsilons),
+        }
+    }
+
+    pub fn op(&self, kind: OpKind) -> &OpMetrics {
+        &self.ops[kind as usize]
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batch_sizes.observe(size as f64);
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let ops = OpKind::ALL
+            .iter()
+            .map(|&k| (k.name(), self.op(k).snapshot()))
+            .collect();
+        Json::obj(vec![
+            ("ops", Json::obj(ops)),
+            ("batch_size", self.batch_sizes.snapshot()),
+            ("validity", self.validity.snapshot()),
+        ])
+    }
+}
+
+/// Registry of per-deployment metric blocks, keyed by deployment name.
+pub struct ObsRegistry {
+    epsilons: Vec<f64>,
+    deployments: RwLock<HashMap<String, Arc<DeploymentObs>>>,
+}
+
+impl ObsRegistry {
+    pub fn new(epsilons: Vec<f64>) -> ObsRegistry {
+        ObsRegistry {
+            epsilons,
+            deployments: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Epsilons every deployment's validity monitor tracks.
+    pub fn epsilons(&self) -> &[f64] {
+        &self.epsilons
+    }
+
+    /// The metric block for `name`, created on first touch. The guard
+    /// is dropped before returning: callers update the block lock-free.
+    pub fn get(&self, name: &str) -> Arc<DeploymentObs> {
+        {
+            // LOCK-ORDER: obs.deployments — lowest-ranked leaf lock,
+            // held only for the HashMap probe; no other lock is taken
+            // while held.
+            let map = self.deployments.read().unwrap();
+            if let Some(d) = map.get(name) {
+                return d.clone();
+            }
+        }
+        // LOCK-ORDER: obs.deployments — write to insert a fresh block;
+        // entry() re-checks so racing creators converge on one Arc.
+        let mut map = self.deployments.write().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| Arc::new(DeploymentObs::new(&self.epsilons)))
+            .clone()
+    }
+
+    /// The block for `name` if it exists (no creation).
+    pub fn peek(&self, name: &str) -> Option<Arc<DeploymentObs>> {
+        // LOCK-ORDER: obs.deployments — read-only probe, leaf lock.
+        self.deployments.read().unwrap().get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        // LOCK-ORDER: obs.deployments — read-only key listing, leaf
+        // lock.
+        let mut out: Vec<String> =
+            self.deployments.read().unwrap().keys().cloned().collect();
+        out.sort();
+        out
+    }
+
+    /// `{deployment: snapshot}` for every known deployment.
+    pub fn snapshot(&self) -> Json {
+        let snap: Vec<(String, Arc<DeploymentObs>)> = {
+            // LOCK-ORDER: obs.deployments — clone the Arc table, then
+            // snapshot outside the guard (snapshots only read atomics).
+            let map = self.deployments.read().unwrap();
+            map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+        };
+        Json::Obj(
+            snap.into_iter()
+                .map(|(k, v)| (k, v.snapshot()))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_kind_round_trip() {
+        for k in OpKind::ALL {
+            assert_eq!(OpKind::from_op(k.name()), Some(k));
+        }
+        assert_eq!(OpKind::from_op("stats"), None);
+    }
+
+    #[test]
+    fn registry_creates_once_and_lists_sorted() {
+        let reg = ObsRegistry::new(vec![0.1]);
+        let a1 = reg.get("zeta");
+        let a2 = reg.get("zeta");
+        assert!(Arc::ptr_eq(&a1, &a2));
+        reg.get("alpha");
+        assert_eq!(reg.names(), vec!["alpha", "zeta"]);
+        assert!(reg.peek("missing").is_none());
+        assert!(reg.peek("alpha").is_some());
+    }
+
+    #[test]
+    fn all_response_arms_feed_latency() {
+        let reg = ObsRegistry::new(vec![0.1]);
+        let d = reg.get("m");
+        let op = d.op(OpKind::Predict);
+        op.record_ok(100);
+        op.record_error(200);
+        op.record_rejected(300);
+        assert_eq!(op.requests.load(Ordering::Relaxed), 3);
+        assert_eq!(op.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(op.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(op.latency.count(), 3, "rejected+error arms in hist");
+    }
+
+    #[test]
+    fn snapshot_shape_is_stable() {
+        let reg = ObsRegistry::new(vec![0.05, 0.1]);
+        let d = reg.get("m");
+        d.op(OpKind::Predict).record_ok(50);
+        d.record_batch(4);
+        let s = reg.snapshot();
+        let m = s.get("m").expect("deployment key");
+        for key in ["ops", "batch_size", "validity"] {
+            assert!(m.get(key).is_some(), "missing {key}");
+        }
+        let ops = m.get("ops").unwrap();
+        for op in ["predict", "predict_region", "learn", "unlearn"] {
+            let block = ops.get(op).expect(op);
+            for key in ["requests", "errors", "rejected", "latency_us"] {
+                assert!(block.get(key).is_some(), "missing {op}.{key}");
+            }
+        }
+    }
+}

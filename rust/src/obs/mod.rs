@@ -1,0 +1,30 @@
+//! Serving observability: stage-level tracing, per-deployment metrics
+//! and online validity monitoring.
+//!
+//! Everything in this module is *off the exact-value path* by
+//! construction: instrumentation reads the wall clock and finished
+//! outputs (p-values, interval endpoints) and never participates in
+//! float compute. `obs/` is deliberately NOT in the EXACT-critical
+//! module list (see EXACTNESS.md and `xtask::exactness`); its one lock
+//! (`obs.deployments`) is the lowest-ranked row of the lock-order
+//! table, so it can be taken while holding any serving lock without
+//! deadlock risk.
+//!
+//! - [`trace`]: span timers over a lock-free seqlock ring, Chrome-trace
+//!   dump (`op:"trace"`) and a background JSONL writer (`--trace-out`).
+//! - [`hist`]: fixed-bucket atomic histograms (the storage primitive).
+//! - [`metrics`]: per-deployment × per-op metric blocks.
+//! - [`validity`]: online empirical error rate vs. tracked epsilons,
+//!   set-size / interval-width histograms, p-value uniformity.
+
+pub mod hist;
+pub mod metrics;
+pub mod trace;
+pub mod validity;
+
+pub use hist::AtomicHist;
+pub use metrics::{DeploymentObs, ObsRegistry, OpKind, OpMetrics};
+pub use trace::{
+    chrome_trace_json, span, span_args, Stage, TraceEvent, TraceRing,
+};
+pub use validity::ValidityMonitor;

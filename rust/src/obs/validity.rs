@@ -1,0 +1,229 @@
+//! Online validity monitoring.
+//!
+//! Conformal prediction's contract is *validity*: under
+//! exchangeability, the true label falls outside the prediction set
+//! with probability at most epsilon. That guarantee is only as good as
+//! the exchangeability assumption, so a serving deployment should watch
+//! its own live error rate (Angelopoulos et al.'s canonical online
+//! health metrics: empirical coverage + prediction-set size).
+//!
+//! This monitor consumes *finished* p-values only — it runs strictly
+//! after the exact scoring path and can never perturb it (EXACTNESS.md;
+//! `obs/` is outside the critical-module list).
+//!
+//! Conventions match `cp::metrics`: a label y is in the prediction set
+//! at significance eps iff `p_y > eps`; an error is the truth falling
+//! outside the set. Under validity the error rate at eps converges to
+//! <= eps, and p-at-truth is (super)uniform on [0,1] — the uniformity
+//! histogram makes miscalibration visible at a glance.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::cp::metrics::set_size;
+use crate::obs::hist::AtomicHist;
+use crate::util::json::Json;
+
+/// Default tracked epsilons when the config does not specify any.
+pub const DEFAULT_EPSILONS: [f64; 3] = [0.05, 0.1, 0.2];
+
+/// Error-rate and efficiency counters at one tracked epsilon.
+struct EpsilonTrack {
+    epsilon: f64,
+    /// Labeled predictions seen (only these can be checked for errors).
+    labeled: AtomicU64,
+    /// Truth outside the prediction set / interval.
+    errors: AtomicU64,
+    /// Sum of prediction-set sizes over labeled classification
+    /// predictions (stays 0 for regression deployments).
+    set_size_sum: AtomicU64,
+}
+
+impl EpsilonTrack {
+    fn new(epsilon: f64) -> EpsilonTrack {
+        EpsilonTrack {
+            epsilon,
+            labeled: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            set_size_sum: AtomicU64::new(0),
+        }
+    }
+
+    fn snapshot(&self) -> Json {
+        let labeled = self.labeled.load(Ordering::Relaxed);
+        let errors = self.errors.load(Ordering::Relaxed);
+        let sizes = self.set_size_sum.load(Ordering::Relaxed);
+        let rate = |num: u64| {
+            if labeled == 0 {
+                0.0
+            } else {
+                num as f64 / labeled as f64
+            }
+        };
+        Json::obj(vec![
+            ("epsilon", Json::Num(self.epsilon)),
+            ("labeled", Json::Num(labeled as f64)),
+            ("errors", Json::Num(errors as f64)),
+            ("error_rate", Json::Num(rate(errors))),
+            ("mean_set_size", Json::Num(rate(sizes))),
+        ])
+    }
+}
+
+/// Per-deployment online validity monitor.
+pub struct ValidityMonitor {
+    tracks: Vec<EpsilonTrack>,
+    /// Primary (first tracked) epsilon: the set-size histogram below is
+    /// computed at this significance for *every* prediction, labeled or
+    /// not.
+    primary: f64,
+    set_sizes: AtomicHist,
+    /// Regression interval widths (upper - lower), all predictions.
+    widths: AtomicHist,
+    /// p-at-truth uniformity histogram (20 buckets over [0,1]).
+    p_at_truth: AtomicHist,
+}
+
+impl ValidityMonitor {
+    pub fn new(epsilons: &[f64]) -> ValidityMonitor {
+        let eps: Vec<f64> = if epsilons.is_empty() {
+            DEFAULT_EPSILONS.to_vec()
+        } else {
+            epsilons.to_vec()
+        };
+        ValidityMonitor {
+            primary: eps[0],
+            tracks: eps.into_iter().map(EpsilonTrack::new).collect(),
+            set_sizes: AtomicHist::linear(16),
+            widths: AtomicHist::widths(),
+            p_at_truth: AtomicHist::unit_interval(20),
+        }
+    }
+
+    pub fn epsilons(&self) -> Vec<f64> {
+        self.tracks.iter().map(|t| t.epsilon).collect()
+    }
+
+    /// Record one classification prediction (its full p-value row) and,
+    /// when the request carried the true label, check it against every
+    /// tracked epsilon.
+    pub fn record_classification(&self, ps: &[f64], truth: Option<usize>) {
+        self.set_sizes.observe(set_size(ps, self.primary) as f64);
+        let Some(y) = truth else { return };
+        let Some(&p_true) = ps.get(y) else { return };
+        self.p_at_truth.observe(p_true);
+        for t in &self.tracks {
+            t.labeled.fetch_add(1, Ordering::Relaxed);
+            if p_true <= t.epsilon {
+                t.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            t.set_size_sum
+                .fetch_add(set_size(ps, t.epsilon) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one regression prediction: total interval width at the
+    /// request's significance, plus — when the request carried the true
+    /// target — the p-value at that target, checked against every
+    /// tracked epsilon (truth in the region at eps iff `p_at_y > eps`).
+    pub fn record_region(&self, width: f64, p_at_y: Option<f64>) {
+        self.widths.observe(width);
+        let Some(p) = p_at_y else { return };
+        self.p_at_truth.observe(p);
+        for t in &self.tracks {
+            t.labeled.fetch_add(1, Ordering::Relaxed);
+            if p <= t.epsilon {
+                t.errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Stable-key JSON snapshot: `per_epsilon`, `set_size_hist`,
+    /// `width_hist`, `p_value_hist`.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "per_epsilon",
+                Json::Arr(self.tracks.iter().map(|t| t.snapshot()).collect()),
+            ),
+            ("set_size_hist", self.set_sizes.snapshot()),
+            ("width_hist", self.widths.snapshot()),
+            ("p_value_hist", self.p_at_truth.snapshot()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn track(json: &Json, i: usize) -> Json {
+        json.get("per_epsilon").unwrap().as_arr().unwrap()[i].clone()
+    }
+
+    #[test]
+    fn empty_epsilons_fall_back_to_defaults() {
+        let v = ValidityMonitor::new(&[]);
+        assert_eq!(v.epsilons(), DEFAULT_EPSILONS.to_vec());
+    }
+
+    #[test]
+    fn classification_errors_counted_per_epsilon() {
+        let v = ValidityMonitor::new(&[0.1, 0.5]);
+        // truth p-value 0.3: error at eps=0.5, covered at eps=0.1
+        v.record_classification(&[0.3, 0.9], Some(0));
+        // truth p-value 0.05: error at both
+        v.record_classification(&[0.8, 0.05], Some(1));
+        // unlabeled: feeds the set-size hist only
+        v.record_classification(&[0.8, 0.2], None);
+        let s = v.snapshot();
+        let t0 = track(&s, 0);
+        assert_eq!(t0.get("epsilon").unwrap().as_f64(), Some(0.1));
+        assert_eq!(t0.get("labeled").unwrap().as_f64(), Some(2.0));
+        assert_eq!(t0.get("errors").unwrap().as_f64(), Some(1.0));
+        assert_eq!(t0.get("error_rate").unwrap().as_f64(), Some(0.5));
+        let t1 = track(&s, 1);
+        assert_eq!(t1.get("errors").unwrap().as_f64(), Some(2.0));
+        // sizes at primary eps=0.1: sets {0.3,0.9}->2, {0.8}->1, {0.8,0.2}->2
+        let sizes = s.get("set_size_hist").unwrap();
+        assert_eq!(sizes.get("count").unwrap().as_f64(), Some(3.0));
+        // mean set size at eps=0.1 over the 2 labeled rows: (2+1)/2
+        assert_eq!(t0.get("mean_set_size").unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn region_widths_and_p_at_y() {
+        let v = ValidityMonitor::new(&[0.1]);
+        v.record_region(3.0, Some(0.04)); // error at 0.1
+        v.record_region(2.0, Some(0.7)); // covered
+        v.record_region(5.0, None); // unlabeled
+        let s = v.snapshot();
+        let t = track(&s, 0);
+        assert_eq!(t.get("labeled").unwrap().as_f64(), Some(2.0));
+        assert_eq!(t.get("errors").unwrap().as_f64(), Some(1.0));
+        let w = s.get("width_hist").unwrap();
+        assert_eq!(w.get("count").unwrap().as_f64(), Some(3.0));
+        let p = s.get("p_value_hist").unwrap();
+        assert_eq!(p.get("count").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn uniform_p_values_give_near_epsilon_error_rate() {
+        let v = ValidityMonitor::new(&[0.1]);
+        // 1000 evenly spread p-at-truth values: error rate -> ~0.1
+        for i in 0..1000 {
+            let p = (i as f64 + 0.5) / 1000.0;
+            v.record_classification(&[p], Some(0));
+        }
+        let t = track(&v.snapshot(), 0);
+        let rate = t.get("error_rate").unwrap().as_f64().unwrap();
+        assert!((rate - 0.1).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn out_of_range_truth_is_ignored() {
+        let v = ValidityMonitor::new(&[0.1]);
+        v.record_classification(&[0.5, 0.5], Some(7));
+        let t = track(&v.snapshot(), 0);
+        assert_eq!(t.get("labeled").unwrap().as_f64(), Some(0.0));
+    }
+}

@@ -191,6 +191,12 @@ impl<M: CpMeasure> ExchangeabilityTest<M> {
         self.martingale.log_mixture()
     }
 
+    /// log of the best single power martingale in the mixture
+    /// (diagnostic, surfaced by the coordinator's `stats` op).
+    pub fn log_max_power(&self) -> f64 {
+        self.martingale.log_max_power()
+    }
+
     pub fn measure(&self) -> &M {
         &self.measure
     }

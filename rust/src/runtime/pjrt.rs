@@ -279,6 +279,12 @@ impl DistEngine for PjrtEngine {
         if p == 0 || xs.is_empty() || rows.is_empty() {
             return;
         }
+        let _span = crate::linalg::engine::kernel_span(
+            crate::obs::trace::engine_id::PJRT,
+            xs,
+            rows,
+            p,
+        );
         match self.rt.dist_matrix_sq_f32(xs, rows, p) {
             Ok(v) => out.copy_from_slice(&v),
             Err(_) => {

@@ -96,6 +96,12 @@ impl DistEngine for PjrtEngine {
     }
 
     fn dist_matrix_sq(&self, xs: &[f64], rows: &[f64], p: usize, out: &mut [f64]) {
+        let _span = crate::linalg::engine::kernel_span(
+            crate::obs::trace::engine_id::STUB,
+            xs,
+            rows,
+            p,
+        );
         crate::linalg::distance::dist_matrix_sq_into(xs, rows, p, out);
     }
 

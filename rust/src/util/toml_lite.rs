@@ -104,6 +104,35 @@ impl Doc {
             .map(|a| a.iter().filter_map(Value::as_usize).collect())
             .unwrap_or_default()
     }
+
+    pub fn f64_array(&self, path: &str) -> Vec<f64> {
+        self.get(path)
+            .and_then(Value::as_array)
+            .map(|a| a.iter().filter_map(Value::as_f64).collect())
+            .unwrap_or_default()
+    }
+
+    /// Distinct first path segments directly under `prefix.` — e.g. for
+    /// entries `serve.deployment.a.k` and `serve.deployment.b.kind`,
+    /// `subsections("serve.deployment")` yields `["a", "b"]` (sorted).
+    /// The config system uses this to enumerate `[serve.deployment.X]`
+    /// blocks without a schema.
+    pub fn subsections(&self, prefix: &str) -> Vec<String> {
+        let dotted = format!("{prefix}.");
+        let mut out: Vec<String> = Vec::new();
+        for key in self.entries.keys() {
+            if let Some(rest) = key.strip_prefix(&dotted) {
+                let seg = rest.split('.').next().unwrap_or("");
+                if !seg.is_empty() && out.last().map(String::as_str) != Some(seg)
+                {
+                    out.push(seg.to_string());
+                }
+            }
+        }
+        // BTreeMap iteration is sorted, so segments arrive grouped; the
+        // last-seen dedup above is sufficient.
+        out
+    }
 }
 
 fn parse_value(raw: &str) -> Result<Value> {
@@ -223,6 +252,35 @@ mod tests {
     fn int_value_readable_as_f64() {
         let doc = parse("x = 3").unwrap();
         assert_eq!(doc.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn f64_array_mixes_ints_and_floats() {
+        let doc = parse("eps = [0.05, 0.1, 1]").unwrap();
+        assert_eq!(doc.f64_array("eps"), vec![0.05, 0.1, 1.0]);
+        assert!(doc.f64_array("missing").is_empty());
+    }
+
+    #[test]
+    fn subsections_enumerates_blocks() {
+        let doc = parse(
+            r#"
+            [serve.deployment.zeta]
+            kind = "ridge"
+            rho = 0.5
+            [serve.deployment.alpha]
+            k = 3
+            [serve]
+            workers = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            doc.subsections("serve.deployment"),
+            vec!["alpha", "zeta"]
+        );
+        assert!(doc.subsections("serve.nope").is_empty());
+        assert_eq!(doc.str_or("serve.deployment.zeta.kind", ""), "ridge");
     }
 
     #[test]

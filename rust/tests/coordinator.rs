@@ -435,3 +435,110 @@ fn malformed_requests_do_not_crash() {
         );
     }
 }
+
+/// `[serve.deployment.X]` blocks round-trip end to end: config text ->
+/// parsed specs -> trained deployments -> wire answers. Two ridge
+/// deployments with different per-deployment rho must serve different
+/// intervals side by side, and a classification spec rides along.
+#[test]
+fn per_deployment_hyperparameters_round_trip() {
+    use exact_cp::config::Config;
+    use exact_cp::coordinator::factory::deployment_from_spec;
+    use exact_cp::util::toml_lite;
+
+    let doc = toml_lite::parse(
+        r#"
+        [measure]
+        k = 5
+        [serve.deployment.stiff]
+        kind = "ridge"
+        rho = 100.0
+        [serve.deployment.loose]
+        kind = "ridge"
+        rho = 0.01
+        [serve.deployment.cls]
+        kind = "simplified-knn"
+        k = 3
+        "#,
+    )
+    .unwrap();
+    let cfg = Config::from_doc(&doc);
+    assert_eq!(cfg.serve.deployments.len(), 3);
+
+    let cls = make_classification(
+        &ClassificationSpec {
+            n_samples: 40,
+            ..Default::default()
+        },
+        1,
+    );
+    let rds = make_regression(
+        &RegressionSpec {
+            n_samples: 40,
+            n_features: 4,
+            n_informative: 3,
+            noise: 3.0,
+        },
+        5,
+    );
+    let reg = Arc::new(Registry::new());
+    for spec in &cfg.serve.deployments {
+        reg.insert(deployment_from_spec(spec, &cls, &rds, None).unwrap());
+    }
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 1,
+            max_wait_us: 200,
+            ..Default::default()
+        },
+        reg,
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv2 = server.clone();
+    let handle = std::thread::spawn(move || serve(srv2, listener));
+    let mut conn = TcpStream::connect(addr).unwrap();
+
+    let list = send(&mut conn, r#"{"op":"list"}"#);
+    assert_eq!(list.get("deployments").unwrap().as_arr().unwrap().len(), 3);
+
+    let mut widths = Vec::new();
+    for dep in ["stiff", "loose"] {
+        let resp = send(
+            &mut conn,
+            &format!(
+                r#"{{"op":"predict_region","deployment":"{dep}","x":[0.2,0.1,0.0,0.3],"epsilon":0.1}}"#,
+            ),
+        );
+        let ivs = resp
+            .get("intervals")
+            .unwrap_or_else(|| panic!("{}", resp.encode()))
+            .as_arr()
+            .unwrap();
+        let w: f64 = ivs
+            .iter()
+            .map(|iv| {
+                let b = iv.as_f64_vec().unwrap();
+                b[1] - b[0]
+            })
+            .sum();
+        assert!(w.is_finite() && w > 0.0, "{dep}: width {w}");
+        widths.push(w);
+    }
+    assert!(
+        (widths[0] - widths[1]).abs() > 1e-9,
+        "per-deployment rho had no effect: widths {widths:?}"
+    );
+
+    let resp = send(
+        &mut conn,
+        &format!(
+            r#"{{"op":"predict","deployment":"cls","x":{},"epsilon":0.1}}"#,
+            x30()
+        ),
+    );
+    assert_eq!(resp.get("p_values").unwrap().as_f64_vec().unwrap().len(), 2);
+
+    send(&mut conn, r#"{"op":"shutdown"}"#);
+    handle.join().unwrap().unwrap();
+}

@@ -1,0 +1,252 @@
+//! Observability end-to-end: tracing must never change served values
+//! (the EXACTNESS.md contract), the validity monitor must track the
+//! configured epsilons under labeled traffic, and the trace ring must
+//! capture every pipeline stage.
+
+use std::sync::{Arc, Mutex};
+
+use exact_cp::config::{
+    MeasureConfig, MeasureKind, ObsConfig, ServeConfig,
+};
+use exact_cp::coordinator::server::Server;
+use exact_cp::coordinator::state::{Deployment, Registry};
+use exact_cp::data::{make_classification, ClassificationSpec};
+use exact_cp::obs::trace;
+use exact_cp::util::json::Json;
+
+/// Tests that flip the process-global trace switch serialize on this
+/// lock (the ring and the enabled flag are shared process state).
+static TRACE_GATE: Mutex<()> = Mutex::new(());
+
+fn registry(n: usize) -> Arc<Registry> {
+    let ds = make_classification(
+        &ClassificationSpec {
+            n_samples: n,
+            ..Default::default()
+        },
+        1,
+    );
+    let reg = Arc::new(Registry::new());
+    let cfg = MeasureConfig {
+        k: 5,
+        ..Default::default()
+    };
+    reg.insert(Deployment::train(
+        "sknn",
+        MeasureKind::SimplifiedKnn,
+        &cfg,
+        &ds,
+        None,
+    ));
+    reg
+}
+
+fn predict_req(x: &[f64], y: Option<usize>, eps: f64) -> Json {
+    let mut pairs = vec![
+        ("op", Json::Str("predict".into())),
+        ("deployment", Json::Str("sknn".into())),
+        ("x", Json::from_f64_slice(x)),
+        ("epsilon", Json::Num(eps)),
+    ];
+    if let Some(y) = y {
+        pairs.push(("y", Json::Num(y as f64)));
+    }
+    Json::obj(pairs)
+}
+
+/// Acceptance gate: batch outputs are bit-identical with observability
+/// on vs off. Two servers trained from the same seed serve the same
+/// probes; every p-value must match to the bit.
+#[test]
+fn served_values_bit_identical_with_tracing_on() {
+    let _g = TRACE_GATE.lock().unwrap();
+    let probes: Vec<Vec<f64>> = (0..8)
+        .map(|i| (0..30).map(|j| 0.05 * i as f64 - 0.01 * j as f64).collect())
+        .collect();
+    let collect = |srv: &Server| -> Vec<Vec<f64>> {
+        probes
+            .iter()
+            .map(|x| {
+                srv.handle(&predict_req(x, None, 0.1))
+                    .get("p_values")
+                    .unwrap()
+                    .as_f64_vec()
+                    .unwrap()
+            })
+            .collect()
+    };
+
+    trace::set_enabled(false);
+    let srv_off = Server::start(
+        ServeConfig {
+            workers: 1,
+            max_wait_us: 100,
+            ..Default::default()
+        },
+        registry(80),
+    );
+    let base = collect(&srv_off);
+    srv_off.shutdown();
+
+    let srv_on = Server::start(
+        ServeConfig {
+            workers: 1,
+            max_wait_us: 100,
+            obs: ObsConfig {
+                trace: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        registry(80),
+    );
+    assert!(trace::enabled(), "obs.trace must switch tracing on");
+    let traced = collect(&srv_on);
+    srv_on.shutdown();
+    trace::set_enabled(false);
+
+    assert_eq!(base.len(), traced.len());
+    for (a, b) in base.iter().zip(&traced) {
+        assert_eq!(a.len(), b.len());
+        for (u, v) in a.iter().zip(b) {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "tracing changed a served p-value: {u} vs {v}"
+            );
+        }
+    }
+}
+
+/// The ring captures every serving stage: queue wait, batch assembly,
+/// the distance-kernel launch, scoring, p-value aggregation, and the
+/// response isn't needed here since we bypass the socket.
+#[test]
+fn trace_ring_captures_pipeline_stages() {
+    let _g = TRACE_GATE.lock().unwrap();
+    let srv = Server::start(
+        ServeConfig {
+            workers: 1,
+            max_wait_us: 100,
+            obs: ObsConfig {
+                trace: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        registry(60),
+    );
+    for i in 0..4 {
+        let x: Vec<f64> = (0..30).map(|j| 0.02 * (i + j) as f64).collect();
+        let resp = srv.handle(&predict_req(&x, None, 0.1));
+        assert!(resp.get("p_values").is_some(), "{}", resp.encode());
+    }
+    let dump = srv.handle(
+        &Json::parse(r#"{"op":"trace","limit":10000}"#).unwrap(),
+    );
+    srv.shutdown();
+    trace::set_enabled(false);
+
+    assert_eq!(dump.get("enabled").and_then(Json::as_bool), Some(true));
+    let evs = dump.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!evs.is_empty());
+    let names: std::collections::BTreeSet<&str> = evs
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    for want in [
+        "queue_wait",
+        "batch_assemble",
+        "dist_kernel",
+        "measure_scores",
+        "p_value_agg",
+    ] {
+        assert!(names.contains(want), "missing stage {want}; saw {names:?}");
+    }
+    // every event is a complete ("X") span with sane fields
+    for e in evs {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).is_some());
+        assert!(e.get("args").and_then(|a| a.get("i")).is_some());
+    }
+}
+
+/// Acceptance gate: labeled traffic drives the per-deployment validity
+/// monitor, and the reported empirical error rate lands near each
+/// tracked epsilon (conformal validity: P(error) <= eps, and for these
+/// p-values approximately = eps on exchangeable data).
+#[test]
+fn labeled_traffic_error_rate_tracks_epsilon() {
+    let train = make_classification(
+        &ClassificationSpec {
+            n_samples: 150,
+            ..Default::default()
+        },
+        1,
+    );
+    // fresh draw from the same distribution => exchangeable probes
+    let probe = make_classification(
+        &ClassificationSpec {
+            n_samples: 400,
+            ..Default::default()
+        },
+        9,
+    );
+    let reg = Arc::new(Registry::new());
+    reg.insert(Deployment::train(
+        "sknn",
+        MeasureKind::SimplifiedKnn,
+        &MeasureConfig {
+            k: 5,
+            ..Default::default()
+        },
+        &train,
+        None,
+    ));
+    let srv = Server::start(
+        ServeConfig {
+            workers: 2,
+            max_wait_us: 100,
+            obs: ObsConfig {
+                epsilons: vec![0.2],
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        reg,
+    );
+    for i in 0..probe.n() {
+        let resp =
+            srv.handle(&predict_req(probe.row(i), Some(probe.y[i]), 0.2));
+        assert!(resp.get("p_values").is_some(), "{}", resp.encode());
+    }
+    let stats = srv
+        .handle(&Json::parse(r#"{"op":"stats","deployment":"sknn"}"#).unwrap());
+    srv.shutdown();
+
+    let dep = stats.get("deployments").unwrap().get("sknn").unwrap();
+    let validity = dep.get("validity").unwrap();
+    let tracks = validity.get("per_epsilon").unwrap().as_arr().unwrap();
+    assert_eq!(tracks.len(), 1);
+    let t = &tracks[0];
+    assert_eq!(t.get("epsilon").and_then(Json::as_f64), Some(0.2));
+    assert_eq!(t.get("labeled").and_then(Json::as_f64), Some(400.0));
+    let rate = t.get("error_rate").and_then(Json::as_f64).unwrap();
+    // eps = 0.2, n = 400: sd ~ 0.02, so [0.08, 0.32] is a +-6 sd band
+    assert!(
+        (0.08..=0.32).contains(&rate),
+        "error rate {rate} not near epsilon 0.2"
+    );
+    let sizes = t.get("mean_set_size").and_then(Json::as_f64).unwrap();
+    assert!(sizes > 0.0 && sizes <= 2.0, "mean set size {sizes}");
+    // histograms saw every labeled prediction
+    let hist = validity.get("set_size_hist").unwrap();
+    assert_eq!(hist.get("count").and_then(Json::as_f64), Some(400.0));
+    let ph = validity.get("p_value_hist").unwrap();
+    assert_eq!(ph.get("count").and_then(Json::as_f64), Some(400.0));
+    // the per-op block counted the same traffic
+    let predict = dep.get("ops").unwrap().get("predict").unwrap();
+    assert_eq!(predict.get("requests").and_then(Json::as_f64), Some(400.0));
+    assert_eq!(predict.get("errors").and_then(Json::as_f64), Some(0.0));
+}

@@ -1,0 +1,112 @@
+//! Server smoke test: boot the full TCP front end on an ephemeral
+//! port with observability on, drive one of each observability op over
+//! the wire, and assert every response is well-formed JSON with the
+//! documented shape (PROTOCOL.md).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use exact_cp::config::{MeasureConfig, MeasureKind, ObsConfig, ServeConfig};
+use exact_cp::coordinator::server::{serve, Server};
+use exact_cp::coordinator::state::{Deployment, Registry};
+use exact_cp::data::{make_classification, ClassificationSpec};
+use exact_cp::util::json::Json;
+
+fn send(stream: &mut TcpStream, req: &str) -> Json {
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap_or_else(|e| {
+        panic!("response not well-formed JSON ({e}): {line:?}")
+    })
+}
+
+#[test]
+fn smoke_predict_stats_trace_over_tcp() {
+    let ds = make_classification(
+        &ClassificationSpec {
+            n_samples: 60,
+            ..Default::default()
+        },
+        1,
+    );
+    let reg = Arc::new(Registry::new());
+    reg.insert(Deployment::train(
+        "sknn",
+        MeasureKind::SimplifiedKnn,
+        &MeasureConfig {
+            k: 5,
+            ..Default::default()
+        },
+        &ds,
+        None,
+    ));
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 2,
+            max_wait_us: 200,
+            obs: ObsConfig {
+                trace: true,
+                ring_capacity: 4096,
+                epsilons: vec![0.1],
+            },
+            ..Default::default()
+        },
+        reg,
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv2 = server.clone();
+    let handle = std::thread::spawn(move || serve(srv2, listener));
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+
+    // labeled predict: feeds both the op block and the validity monitor
+    let x: Vec<String> = (0..30).map(|_| "0.1".to_string()).collect();
+    let resp = send(
+        &mut conn,
+        &format!(
+            r#"{{"op":"predict","deployment":"sknn","x":[{}],"epsilon":0.1,"y":1}}"#,
+            x.join(",")
+        ),
+    );
+    let ps = resp.get("p_values").unwrap().as_f64_vec().unwrap();
+    assert_eq!(ps.len(), 2);
+    assert!(ps.iter().all(|&p| (0.0..=1.0).contains(&p)));
+
+    // stats: per-deployment block reflects the one predict
+    let stats = send(&mut conn, r#"{"op":"stats"}"#);
+    for key in ["deployments", "epsilons", "testers", "trace", "requests"] {
+        assert!(stats.get(key).is_some(), "stats missing {key}");
+    }
+    let dep = stats.get("deployments").unwrap().get("sknn").unwrap();
+    let predict = dep.get("ops").unwrap().get("predict").unwrap();
+    assert_eq!(predict.get("requests").and_then(Json::as_f64), Some(1.0));
+    let track = &dep
+        .get("validity")
+        .unwrap()
+        .get("per_epsilon")
+        .unwrap()
+        .as_arr()
+        .unwrap()[0];
+    assert_eq!(track.get("epsilon").and_then(Json::as_f64), Some(0.1));
+    assert_eq!(track.get("labeled").and_then(Json::as_f64), Some(1.0));
+
+    // trace: the ring saw the predict's pipeline stages
+    let trace = send(&mut conn, r#"{"op":"trace"}"#);
+    assert_eq!(trace.get("enabled").and_then(Json::as_bool), Some(true));
+    let evs = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!evs.is_empty(), "trace ring empty after traffic");
+    for e in evs {
+        assert!(e.get("name").and_then(Json::as_str).is_some());
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+    }
+
+    let bye = send(&mut conn, r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    handle.join().unwrap().unwrap();
+    exact_cp::obs::trace::set_enabled(false);
+}

@@ -37,6 +37,10 @@ pub const LOCK_ORDER: &[(&str, &str)] = &[
     ("runtime.exec_cache", "pjrt.rs executable-cache Mutex"),
     ("linalg.tile_queue", "distance.rs worker tile-iterator Mutex"),
     ("bench.result_slots", "timing.rs parallel_map output Mutex"),
+    (
+        "obs.deployments",
+        "obs/metrics.rs per-deployment metric-block RwLock",
+    ),
 ];
 
 fn rank_of(name: &str) -> Option<usize> {
