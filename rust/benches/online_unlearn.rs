@@ -1,0 +1,163 @@
+//! Bench: decremental unlearn + repredict vs retrain-from-scratch.
+//!
+//! This is the acceptance gate for decremental regression serving
+//! (ROADMAP "Regression serving gaps"): in the paper's online pattern —
+//! remove a recent example, then serve the next prediction — the ridge
+//! journal path (`RidgeCp::unlearn`, checkpoint + bounded replay) must
+//! be at least 2x faster than refitting on the reduced set, at the
+//! serving shape n=2000 training rows, p=16 features.
+//!
+//! Before timing, the bench asserts the exactness contract: after
+//! `unlearn(idx)` (tail, head, and checkpoint-crossing indices) the
+//! served coefficients are bit-identical to a fresh fit on the reduced
+//! set, for ridge AND the optimized k-NN regressor.
+//!
+//! Results are written to `BENCH_online_unlearn.json`. Smoke mode
+//! (`BENCH_QUICK=1` or a `--test` argument, used by CI) runs the
+//! exactness asserts and emits the JSON but skips the 2x gate — shared
+//! CI runners make wall-clock gates flaky.
+
+use std::time::Duration;
+
+use exact_cp::data::{make_regression, RegressionSpec};
+use exact_cp::regression::{
+    Coefficients, CpRegressor, KnnRegressorOptimized, RidgeCp,
+};
+
+const N: usize = 2000;
+const P: usize = 16;
+const RHO: f64 = 1.0;
+const EPS: f64 = 0.1;
+
+fn coefs_bits_eq(a: &Coefficients, b: &Coefficients) -> bool {
+    a.1.to_bits() == b.1.to_bits()
+        && a.2.to_bits() == b.2.to_bits()
+        && a.0.len() == b.0.len()
+        && a.0.iter().zip(&b.0).all(|(u, v)| {
+            u.0.to_bits() == v.0.to_bits() && u.1.to_bits() == v.1.to_bits()
+        })
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_QUICK").is_ok()
+        || std::env::args().any(|a| a == "--test");
+    let budget = Duration::from_millis(if smoke { 150 } else { 1500 });
+
+    let ds = make_regression(
+        &RegressionSpec {
+            n_samples: N,
+            n_features: P,
+            n_informative: 6,
+            noise: 4.0,
+        },
+        42,
+    );
+    let probes = make_regression(
+        &RegressionSpec {
+            n_samples: 4,
+            n_features: P,
+            n_informative: 6,
+            noise: 4.0,
+        },
+        43,
+    );
+    let xs: Vec<&[f64]> = (0..probes.n()).map(|i| probes.row(i)).collect();
+
+    // ---- exactness contract (always enforced) -----------------------
+    // tail, head, and checkpoint-boundary removals on a small copy (the
+    // property suite covers this exhaustively; here it gates timing)
+    {
+        let small = make_regression(
+            &RegressionSpec {
+                n_samples: 200,
+                n_features: P,
+                n_informative: 6,
+                noise: 4.0,
+            },
+            44,
+        );
+        let mut ridge = RidgeCp::new(RHO);
+        let mut knn = KnnRegressorOptimized::new(5);
+        CpRegressor::fit(&mut ridge, &small);
+        CpRegressor::fit(&mut knn, &small);
+        let mut reduced = small.clone();
+        for idx in [199, 0, 127, 64, 50] {
+            assert!(ridge.unlearn(idx), "ridge unlearn({idx})");
+            assert!(knn.unlearn(idx), "knn unlearn({idx})");
+            reduced.remove(idx);
+            let mut fresh_r = RidgeCp::new(RHO);
+            let mut fresh_k = KnnRegressorOptimized::new(5);
+            CpRegressor::fit(&mut fresh_r, &reduced);
+            CpRegressor::fit(&mut fresh_k, &reduced);
+            for &x in &xs {
+                assert!(
+                    coefs_bits_eq(
+                        &ridge.coefficients(x),
+                        &fresh_r.coefficients(x)
+                    ),
+                    "ridge not bit-identical to refit after unlearn({idx})"
+                );
+                assert!(
+                    coefs_bits_eq(
+                        &knn.coefficients(x),
+                        &fresh_k.coefficients(x)
+                    ),
+                    "knn not bit-identical to refit after unlearn({idx})"
+                );
+            }
+        }
+    }
+    println!("exactness: unlearn == fresh refit for ridge + knn (bitwise)");
+
+    // ---- timing -----------------------------------------------------
+    // the online pattern: drop the most recent example, serve the next
+    // region. The decremental path re-learns the row after predicting to
+    // restore state for the next iteration (bit-exact round trip), so it
+    // is charged for one learn MORE than the retrain path — conservative.
+    println!("== online_unlearn: ridge n={N} p={P} ==");
+    let (x_last, y_last) = (ds.row(N - 1).to_vec(), ds.y[N - 1]);
+    let mut reduced = ds.clone();
+    reduced.remove(N - 1);
+
+    let mut live = RidgeCp::new(RHO);
+    CpRegressor::fit(&mut live, &ds);
+    let t_dec = exact_cp::bench_harness::timing::microbench(
+        "unlearn + repredict (journal)",
+        budget,
+        || {
+            assert!(live.unlearn(N - 1));
+            let region = live.predict_region(xs[0], EPS);
+            assert!(live.learn(&x_last, y_last));
+            region.intervals.len()
+        },
+    );
+    let t_retrain = exact_cp::bench_harness::timing::microbench(
+        "retrain + repredict (from scratch)",
+        budget,
+        || {
+            let mut fresh = RidgeCp::new(RHO);
+            CpRegressor::fit(&mut fresh, &reduced);
+            fresh.predict_region(xs[0], EPS).intervals.len()
+        },
+    );
+    let speedup = t_retrain / t_dec;
+    println!("online_unlearn: decremental speedup {speedup:.2}x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"online_unlearn\",\n  \"n\": {N},\n  \
+         \"p\": {P},\n  \"rho\": {RHO},\n  \
+         \"decremental_s\": {t_dec:.9},\n  \
+         \"retrain_s\": {t_retrain:.9},\n  \"speedup\": {speedup:.4},\n  \
+         \"smoke\": {smoke}\n}}\n"
+    );
+    std::fs::write("BENCH_online_unlearn.json", &json)
+        .expect("writing BENCH_online_unlearn.json");
+    println!("wrote BENCH_online_unlearn.json");
+
+    if !smoke {
+        assert!(
+            speedup >= 2.0,
+            "decremental path must be >= 2x retrain, got {speedup:.2}x"
+        );
+    }
+}

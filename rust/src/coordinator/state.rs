@@ -223,16 +223,34 @@ impl Deployment {
         }
     }
 
-    /// Online decrement by training index.
+    /// Online decrement by training index — classification and
+    /// regression deployments alike. Out-of-range indexes are reported
+    /// distinctly from missing decremental support so clients can tell
+    /// a bad request from a capability gap.
     pub fn unlearn(&mut self, idx: usize) -> Result<()> {
-        let Model::Classifier { measure, .. } = &mut self.model else {
-            bail!("regression deployments do not support unlearn yet");
+        let n = self.n_train();
+        if idx >= n {
+            bail!(
+                "unlearn index {} out of range for deployment {:?} \
+                 (n_train = {})",
+                idx,
+                self.name,
+                n
+            );
+        }
+        let (ok, name) = match &mut self.model {
+            Model::Classifier { measure, .. } => {
+                (measure.unlearn(idx), measure.name())
+            }
+            Model::Regressor { regressor } => {
+                (regressor.unlearn(idx), regressor.name())
+            }
         };
-        if measure.unlearn(idx) {
+        if ok {
             self.version += 1;
             Ok(())
         } else {
-            bail!("measure {} does not support online unlearn", measure.name())
+            bail!("model {name} does not support online unlearn")
         }
     }
 
@@ -412,11 +430,16 @@ mod tests {
         assert!(rows[2].p_at_y.unwrap() <= 2.0 / 31.0 + 1e-12);
         // wrong-op routing errors instead of panicking
         assert!(dep.learn(&vec![0.0; 4], 1).is_err());
-        assert!(dep.unlearn(0).is_err());
+        // out-of-range unlearn is a structured error; in-range works
+        // and bumps the version (decremental regression serving)
+        assert!(dep.unlearn(30).is_err());
+        dep.unlearn(29).unwrap();
+        assert_eq!(dep.n_train(), 29);
+        assert_eq!(dep.version, 1);
         // float-label learn works and bumps the version
         dep.learn_reg(rds.row(0), rds.y[0]).unwrap();
-        assert_eq!(dep.n_train(), 31);
-        assert_eq!(dep.version, 1);
+        assert_eq!(dep.n_train(), 30);
+        assert_eq!(dep.version, 2);
         // classifiers reject float-label learn symmetrically
         let cds = ds(20, 6);
         let mut cdep = Deployment::train(
@@ -428,6 +451,46 @@ mod tests {
         );
         assert!(cdep.learn_reg(cds.row(0), 0.5).is_err());
         assert!(cdep.region_rows(&[cds.row(0)], &[0.1], &[None]).is_err());
+    }
+
+    #[test]
+    fn regression_unlearn_matches_fresh_deployment() {
+        // every served regressor kind: unlearn then predict_region
+        // answers equal a deployment freshly trained on the reduced set
+        use crate::data::{make_regression, RegressionSpec};
+        let rds = make_regression(
+            &RegressionSpec {
+                n_samples: 30,
+                n_features: 4,
+                n_informative: 3,
+                noise: 3.0,
+            },
+            7,
+        );
+        let cfg = MeasureConfig {
+            k: 3,
+            ..Default::default()
+        };
+        for kind in RegressorKind::all() {
+            let mut dep =
+                Deployment::train_regression("d", kind, &cfg, &rds, None);
+            dep.unlearn(12).unwrap();
+            dep.unlearn(0).unwrap();
+            assert_eq!(dep.version, 2);
+            let mut reduced = rds.clone();
+            reduced.remove(12);
+            reduced.remove(0);
+            let fresh =
+                Deployment::train_regression("d2", kind, &cfg, &reduced, None);
+            assert_eq!(dep.n_train(), fresh.n_train());
+            for i in 0..3 {
+                let y = Some(rds.y[i]);
+                let a = dep.predict_region(rds.row(i), 0.1, y).unwrap();
+                let b = fresh.predict_region(rds.row(i), 0.1, y).unwrap();
+                assert_eq!(a.region, b.region, "{kind:?} i={i}");
+                assert_eq!(a.p_at_y, b.p_at_y, "{kind:?} i={i}");
+            }
+        }
     }
 
     #[test]

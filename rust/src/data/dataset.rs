@@ -139,6 +139,23 @@ impl RegressionDataset {
         &self.x[i * self.p..(i + 1) * self.p]
     }
 
+    /// Append one example (the online learn path).
+    pub fn push(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len(), self.p);
+        self.x.extend_from_slice(x);
+        self.y.push(y);
+    }
+
+    /// Remove the `i`-th example (swap-remove semantics are NOT used:
+    /// order is preserved because decremental-regressor state — journal
+    /// prefixes, neighbour statistics — is indexed in insertion order).
+    pub fn remove(&mut self, i: usize) -> (Vec<f64>, f64) {
+        let row = self.row(i).to_vec();
+        let y = self.y.remove(i);
+        self.x.drain(i * self.p..(i + 1) * self.p);
+        (row, y)
+    }
+
     pub fn split(
         &self,
         n_train: usize,
@@ -209,5 +226,22 @@ mod tests {
         assert_eq!(tr.n(), 3);
         assert_eq!(te.n(), 1);
         assert_eq!(tr.p, 2);
+    }
+
+    #[test]
+    fn regression_push_remove_preserves_order() {
+        let mut d = RegressionDataset::new(
+            vec![0., 0., 1., 1., 2., 2.],
+            vec![10., 11., 12.],
+            2,
+        );
+        d.push(&[3., 3.], 13.);
+        assert_eq!(d.n(), 4);
+        let (row, y) = d.remove(1);
+        assert_eq!(row, vec![1., 1.]);
+        assert_eq!(y, 11.);
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.row(1), &[2., 2.]);
+        assert_eq!(d.y, vec![10., 12., 13.]);
     }
 }

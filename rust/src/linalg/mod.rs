@@ -80,10 +80,7 @@ impl Mat {
         assert_eq!(v.len(), self.rows);
         let mut out = vec![0.0; self.cols];
         for i in 0..self.rows {
-            let vi = v[i];
-            for (o, &a) in out.iter_mut().zip(self.row(i)) {
-                *o += vi * a;
-            }
+            tmatvec_accum_row(&mut out, v[i], self.row(i));
         }
         out
     }
@@ -114,23 +111,23 @@ impl Mat {
         let q = self.cols;
         let mut g = Mat::zeros(q, q);
         for r in 0..self.rows {
-            let row = self.row(r);
-            for i in 0..q {
-                let ri = row[i];
-                if ri == 0.0 {
-                    continue;
-                }
-                for j in i..q {
-                    g[(i, j)] += ri * row[j];
-                }
-            }
+            gram_accum_row(&mut g, self.row(r));
         }
+        g.mirror_upper_to_lower();
+        g
+    }
+
+    /// Copy the (strict) upper triangle onto the lower one — the
+    /// finalization step of [`Mat::gram`], exposed so incremental
+    /// callers that accumulate the upper triangle row by row (via
+    /// [`gram_accum_row`]) can finish exactly like the one-shot path.
+    pub fn mirror_upper_to_lower(&mut self) {
+        let q = self.rows.min(self.cols);
         for i in 0..q {
             for j in 0..i {
-                g[(i, j)] = g[(j, i)];
+                self[(i, j)] = self[(j, i)];
             }
         }
-        g
     }
 
     pub fn transpose(&self) -> Mat {
@@ -164,6 +161,36 @@ impl Mat {
                 *o += s * b;
             }
         }
+    }
+}
+
+/// One row's rank-1 contribution `row row^T` to the upper triangle of a
+/// Gram accumulator — the exact inner body of [`Mat::gram`], factored
+/// out so incremental/decremental callers (the ridge sufficient-statistic
+/// journal) replay the one-shot fit's add sequence term for term. Only
+/// the upper triangle (`j >= i`) is touched; finish with
+/// [`Mat::mirror_upper_to_lower`] after the last row.
+pub fn gram_accum_row(g: &mut Mat, row: &[f64]) {
+    let q = row.len();
+    debug_assert_eq!(g.rows, q);
+    debug_assert_eq!(g.cols, q);
+    for i in 0..q {
+        let ri = row[i];
+        if ri == 0.0 {
+            continue;
+        }
+        for j in i..q {
+            g[(i, j)] += ri * row[j];
+        }
+    }
+}
+
+/// One row's contribution `vi * row` to a `self^T v` accumulator — the
+/// exact inner body of [`Mat::tmatvec`], factored out for the same
+/// sequential-replay reason as [`gram_accum_row`].
+pub fn tmatvec_accum_row(out: &mut [f64], vi: f64, row: &[f64]) {
+    for (o, &a) in out.iter_mut().zip(row) {
+        *o += vi * a;
     }
 }
 
@@ -350,6 +377,46 @@ mod tests {
         let g2 = a.transpose().matmul(&a);
         for (x, y) in g.data.iter().zip(&g2.data) {
             assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn row_accumulators_replay_one_shot_bitwise() {
+        // the property the ridge journal rests on: accumulating row by
+        // row — including resuming from a mid-stream prefix checkpoint —
+        // reproduces the one-shot gram()/tmatvec() bit for bit.
+        let a = rand_mat(9, 5, 11);
+        let v: Vec<f64> = (0..9).map(|i| (i as f64) - 4.0).collect();
+        let (g1, t1) = (a.gram(), a.tmatvec(&v));
+        let mut g2 = Mat::zeros(5, 5);
+        let mut t2 = vec![0.0; 5];
+        let mut ckpt = None;
+        for r in 0..a.rows {
+            if r == 4 {
+                ckpt = Some((g2.clone(), t2.clone()));
+            }
+            gram_accum_row(&mut g2, a.row(r));
+            tmatvec_accum_row(&mut t2, v[r], a.row(r));
+        }
+        // resume from the checkpoint and replay the suffix
+        let (mut g3, mut t3) = ckpt.unwrap();
+        for r in 4..a.rows {
+            gram_accum_row(&mut g3, a.row(r));
+            tmatvec_accum_row(&mut t3, v[r], a.row(r));
+        }
+        g2.mirror_upper_to_lower();
+        g3.mirror_upper_to_lower();
+        for (x, y) in g1.data.iter().zip(&g2.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in g1.data.iter().zip(&g3.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in t1.iter().zip(&t2) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in t1.iter().zip(&t3) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

@@ -253,11 +253,23 @@ impl CpRegressor for KnnRegressorStandard {
     fn learn(&mut self, x: &[f64], y: f64) -> bool {
         match self.ds.as_mut() {
             Some(ds) => {
-                ds.x.extend_from_slice(x);
-                ds.y.push(y);
+                ds.push(x, y);
                 true
             }
             None => false,
+        }
+    }
+
+    /// ... and decremental unlearning is just dropping the row (order
+    /// preserved). Trivially bit-identical to a fresh fit on the
+    /// reduced set: prediction recomputes everything from `ds`.
+    fn unlearn(&mut self, idx: usize) -> bool {
+        match self.ds.as_mut() {
+            Some(ds) if idx < ds.n() => {
+                ds.remove(idx);
+                true
+            }
+            _ => false,
         }
     }
 }
@@ -381,8 +393,7 @@ impl KnnRegressorOptimized {
         for v in d.iter_mut() {
             *v = v.sqrt();
         }
-        ds.x.extend_from_slice(x);
-        ds.y.push(y);
+        ds.push(x, y);
         // rows whose k-NN set the new point enters must be recomputed;
         // underfull rows always change
         let ds = self.ds.as_ref().unwrap();
@@ -403,6 +414,58 @@ impl KnnRegressorOptimized {
             *v = v.sqrt();
         }
         self.stats.push(nn_stats(&d_new, &ds.y, n, self.k));
+    }
+
+    /// Online decrement (the paper's removal step applied to §8.1):
+    /// drop training row `idx` and rebuild the neighbour statistics of
+    /// every row whose k-NN set could have contained it — the same
+    /// rebuild-row pattern as the classification measure's unlearn
+    /// (`measures/knn.rs`). Bit-identical to a fresh fit on the reduced
+    /// set: [`nn_stats`] sums labels in sorted `(distance, index)`
+    /// order — a canonical order that the uniform index shift of the
+    /// surviving rows preserves — so untouched rows keep fit-equal
+    /// bits and rebuilt rows replay the fit computation on the same
+    /// reduced distance row.
+    pub fn unlearn(&mut self, idx: usize) -> bool {
+        let Some(ds) = self.ds.as_mut() else {
+            return false;
+        };
+        if idx >= ds.n() {
+            return false;
+        }
+        // distances from the removed point to everyone (cheap k-NN
+        // membership test; sq_dist is bitwise symmetric)
+        let x_rm = ds.row(idx).to_vec();
+        let mut d = vec![0.0; ds.n()];
+        self.engine.dist_row_sq(&x_rm, &ds.x, ds.p, &mut d);
+        for v in d.iter_mut() {
+            *v = v.sqrt();
+        }
+        ds.remove(idx);
+        self.stats.remove(idx);
+        // note: d still indexed by OLD rows; map old j -> new row.
+        // `<=` catches the removed point tied at the k-th distance
+        // (conservative: rebuilding an unaffected row is exact because
+        // nn_stats is canonical); underfull rows have delta_k = inf and
+        // always rebuild.
+        let stale: Vec<usize> = (0..d.len())
+            .filter(|&j| j != idx)
+            .filter(|&j| {
+                let new_j = if j > idx { j - 1 } else { j };
+                d[j] <= self.stats[new_j].delta_k
+            })
+            .map(|j| if j > idx { j - 1 } else { j })
+            .collect();
+        let ds = self.ds.as_ref().unwrap();
+        let mut d_i = vec![0.0; ds.n()];
+        for i in stale {
+            self.engine.dist_row_sq(ds.row(i), &ds.x, ds.p, &mut d_i);
+            for v in d_i.iter_mut() {
+                *v = v.sqrt();
+            }
+            self.stats[i] = nn_stats(&d_i, &ds.y, i, self.k);
+        }
+        true
     }
 }
 
@@ -433,6 +496,10 @@ impl CpRegressor for KnnRegressorOptimized {
         }
         KnnRegressorOptimized::learn(self, x, y);
         true
+    }
+
+    fn unlearn(&mut self, idx: usize) -> bool {
+        KnnRegressorOptimized::unlearn(self, idx)
     }
 }
 
@@ -677,6 +744,80 @@ mod tests {
                 refit.coefficients(probe.row(i))
             );
         }
+    }
+
+    #[test]
+    fn unlearn_matches_refit_bitwise_optimized() {
+        let d = ds(40, 30);
+        let mut dec = KnnRegressorOptimized::new(3);
+        dec.fit(&d);
+        let mut reduced = d.clone();
+        let probe = ds(5, 31);
+        for idx in [39, 0, 17, 0] {
+            assert!(dec.unlearn(idx), "idx {idx}");
+            reduced.remove(idx);
+            let mut fresh = KnnRegressorOptimized::new(3);
+            fresh.fit(&reduced);
+            for i in 0..probe.n() {
+                assert!(
+                    coefs_identical(
+                        &dec.coefficients(probe.row(i)),
+                        &fresh.coefficients(probe.row(i)),
+                    ),
+                    "idx {idx} probe {i}"
+                );
+            }
+        }
+        assert_eq!(dec.n(), 36);
+        assert!(!dec.unlearn(36));
+    }
+
+    #[test]
+    fn learn_unlearn_roundtrip_bit_identical_all_kinds() {
+        let d = ds(25, 32);
+        let z = ds(1, 33);
+        let probe = ds(4, 34);
+        let mut o = KnnRegressorOptimized::new(3);
+        let mut s = KnnRegressorStandard::new(3);
+        o.fit(&d);
+        s.fit(&d);
+        for m in [&mut o as &mut dyn CpRegressor, &mut s] {
+            let before: Vec<Coefficients> =
+                (0..probe.n()).map(|i| m.coefficients(probe.row(i))).collect();
+            assert!(m.learn(z.row(0), z.y[0]));
+            assert!(m.unlearn(25));
+            assert_eq!(m.n(), 25);
+            for (i, want) in before.iter().enumerate() {
+                assert!(
+                    coefs_identical(&m.coefficients(probe.row(i)), want),
+                    "{} probe {i}",
+                    m.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unlearn_below_k_training_examples() {
+        // shrink past n = k: delta_k goes infinite, every row rebuilds
+        let d = ds(5, 35);
+        let mut dec = KnnRegressorOptimized::new(3);
+        dec.fit(&d);
+        let mut reduced = d.clone();
+        for _ in 0..4 {
+            assert!(dec.unlearn(0));
+            reduced.remove(0);
+            let mut fresh = KnnRegressorOptimized::new(3);
+            fresh.fit(&reduced);
+            let probe = ds(2, 36);
+            for i in 0..probe.n() {
+                assert!(coefs_identical(
+                    &dec.coefficients(probe.row(i)),
+                    &fresh.coefficients(probe.row(i)),
+                ));
+            }
+        }
+        assert_eq!(dec.n(), 1);
     }
 
     #[test]

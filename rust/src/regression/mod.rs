@@ -42,6 +42,12 @@
 //! `rust/tests/golden_regions.rs` (expected intervals from an
 //! independent Python reference), and asserted before timing by
 //! `rust/benches/batch_regression.rs`.
+//!
+//! The same contract extends to the online path: after
+//! [`CpRegressor::learn`] / [`CpRegressor::unlearn`] every served value
+//! must be bit-identical to a fresh fit on the grown/reduced training
+//! set (EXACTNESS.md "Decremental paths"; locked by the learn/unlearn
+//! round-trip proptests and `benches/online_unlearn.rs`).
 
 pub mod knn_reg;
 pub mod region;
@@ -135,6 +141,20 @@ pub trait CpRegressor: Send + Sync {
     fn learn(&mut self, _x: &[f64], _y: f64) -> bool {
         false
     }
+
+    /// Decrementally unlearn the training example at `idx` (the paper's
+    /// removal step, §4/§8). Returns false when the regressor does not
+    /// support decremental updates or `idx` is out of range.
+    ///
+    /// **Contract: bit-exact.** After `unlearn(idx)` every served value
+    /// (coefficients, regions, p-values) must be bit-identical to a
+    /// regressor freshly fitted on the training set with row `idx`
+    /// removed (order otherwise preserved) — see EXACTNESS.md
+    /// "Decremental paths". Enforced by the round-trip proptests in
+    /// `rust/tests/proptests.rs` and `benches/online_unlearn.rs`.
+    fn unlearn(&mut self, _idx: usize) -> bool {
+        false
+    }
 }
 
 /// Boxed regressors forward every method — including the batch entry
@@ -179,5 +199,9 @@ impl<R: CpRegressor + ?Sized> CpRegressor for Box<R> {
 
     fn learn(&mut self, x: &[f64], y: f64) -> bool {
         (**self).learn(x, y)
+    }
+
+    fn unlearn(&mut self, idx: usize) -> bool {
+        (**self).unlearn(idx)
     }
 }

@@ -14,11 +14,48 @@
 //! Cost per test point: O(p^2) Sherman–Morrison update of M (vs O(p^3)
 //! refactorization for the unoptimized variant) + O(n p) coefficient
 //! assembly + O(n log n) sweep.
+//!
+//! # Decremental learning: the sufficient-statistic journal
+//!
+//! The training-set state is fully described by the sufficient
+//! statistics `G = X^T X` (upper triangle) and `X^T Y`, which a fresh
+//! fit accumulates as per-entry *sequential sums over rows in canonical
+//! (insertion) order* — one [`linalg::gram_accum_row`] /
+//! [`linalg::tmatvec_accum_row`] rank-1 term per example. Sequential
+//! floating-point summation is resumable: the value of each entry
+//! depends only on the *sequence* of addends, so a prefix of the
+//! accumulation plus a replay of the remaining rows in order reproduces
+//! the one-shot fit bit for bit. The journal therefore keeps prefix
+//! checkpoints of `(G, X^T Y)` every [`CKPT_EVERY`] rows; unlearning
+//! row `idx` restores the deepest checkpoint at or before `idx`,
+//! removes the row, and replays the surviving suffix — identical adds,
+//! identical bits to a from-scratch refit on the reduced set. No
+//! Sherman–Morrison *downdate* is used anywhere: a downdate is
+//! algebraically exact but not floating-point exact, and the contract
+//! here (EXACTNESS.md "Decremental paths") is bit-identity.
+//!
+//! Cost: unlearning row `idx` replays at most `CKPT_EVERY - 1` rows of
+//! prefix slack plus the `n - idx - 1` rows behind it, then one O(p^3)
+//! refactorization — O(p^3) for the paper's online pattern (removing
+//! recent examples) vs O(n p^2 + p^3) for a refit. Checkpoint memory is
+//! O(n p^2 / CKPT_EVERY).
 
 use crate::data::RegressionDataset;
 use crate::linalg::{self, dot, Mat};
 use crate::regression::region::{conformal_region, p_value_at, Region};
 use crate::regression::{Coefficients, CpRegressor};
+
+/// Journal checkpoint cadence (rows between prefix snapshots).
+const CKPT_EVERY: usize = 64;
+
+/// A prefix checkpoint: the sufficient statistics after accumulating
+/// the first `rows` training examples in canonical order.
+struct Ckpt {
+    rows: usize,
+    /// upper triangle only (mirrored at finalization, like `Mat::gram`)
+    gram: Mat,
+    xty: Vec<f64>,
+}
 
 /// Full CP ridge regressor.
 pub struct RidgeCp {
@@ -27,8 +64,14 @@ pub struct RidgeCp {
     /// (X^T X + rho I)^-1 over the training set (updated per test point
     /// via Sherman–Morrison, never refactorized)
     m0: Option<Mat>,
-    /// X^T Y over the training set
+    /// X^T Y over the training set — also the journal's running
+    /// accumulator (sequential over rows in canonical order)
     xty: Vec<f64>,
+    /// running upper-triangle accumulation of X^T X (no ridge term),
+    /// replaying `Mat::gram`'s add sequence row by row
+    gram_acc: Mat,
+    /// prefix checkpoints of `(gram_acc, xty)`, ascending in `rows`
+    ckpts: Vec<Ckpt>,
 }
 
 impl RidgeCp {
@@ -38,22 +81,105 @@ impl RidgeCp {
             ds: None,
             m0: None,
             xty: Vec::new(),
+            gram_acc: Mat::zeros(0, 0),
+            ckpts: Vec::new(),
         }
     }
 
-    /// O(n p^2 + p^3) one-off training.
+    /// O(n p^2 + p^3) one-off training (builds the journal as it goes).
     pub fn fit(&mut self, ds: &RegressionDataset) {
         let p = ds.p;
-        let x = Mat {
-            data: ds.x.clone(),
-            rows: ds.n(),
-            cols: p,
-        };
-        let mut g = x.gram();
+        self.ds = Some(ds.clone());
+        self.gram_acc = Mat::zeros(p, p);
+        self.xty = vec![0.0; p];
+        self.ckpts = Vec::new();
+        self.accum_rows(0);
+        self.finalize();
+    }
+
+    /// Accumulate training rows `from..n` into the journal state in
+    /// canonical order, snapshotting a checkpoint whenever the prefix
+    /// length crosses a [`CKPT_EVERY`] boundary. Callers guarantee the
+    /// current `(gram_acc, xty)` is exactly the accumulation of rows
+    /// `0..from` and that no checkpoint deeper than `from` is stored.
+    fn accum_rows(&mut self, from: usize) {
+        let ds = self.ds.take().expect("fit first");
+        for i in from..ds.n() {
+            let due = i > 0 && i % CKPT_EVERY == 0;
+            if due && self.ckpts.last().is_none_or(|c| c.rows < i) {
+                self.ckpts.push(Ckpt {
+                    rows: i,
+                    gram: self.gram_acc.clone(),
+                    xty: self.xty.clone(),
+                });
+            }
+            linalg::gram_accum_row(&mut self.gram_acc, ds.row(i));
+            linalg::tmatvec_accum_row(&mut self.xty, ds.y[i], ds.row(i));
+        }
+        self.ds = Some(ds);
+    }
+
+    /// Refresh the factorization from the journal accumulators exactly
+    /// like the one-shot path: mirror the upper triangle (the tail of
+    /// `Mat::gram`), add the ridge, invert.
+    fn finalize(&mut self) {
+        let mut g = self.gram_acc.clone();
+        g.mirror_upper_to_lower();
         g.add_diag(self.rho);
         self.m0 = Some(linalg::spd_inverse(&g).expect("ridge Gram SPD"));
-        self.xty = x.tmatvec(&ds.y);
-        self.ds = Some(ds.clone());
+    }
+
+    /// Incrementally learn one example: one rank-1 journal append +
+    /// O(p^3) refactorization — bit-identical to refitting on the grown
+    /// set because the append extends the same sequential sums.
+    pub fn learn(&mut self, x: &[f64], y: f64) -> bool {
+        let Some(ds) = self.ds.as_mut() else {
+            return false;
+        };
+        if x.len() != ds.p {
+            return false;
+        }
+        let i = ds.n();
+        ds.push(x, y);
+        self.accum_rows(i);
+        self.finalize();
+        true
+    }
+
+    /// Decrementally unlearn the training row at `idx`: restore the
+    /// deepest journal checkpoint covering only rows before `idx`,
+    /// drop the row, replay the surviving suffix in canonical order,
+    /// refactorize. Bit-identical to a fresh fit on the reduced set
+    /// (module docs); returns false if `idx` is out of range.
+    pub fn unlearn(&mut self, idx: usize) -> bool {
+        let Some(ds) = self.ds.as_mut() else {
+            return false;
+        };
+        if idx >= ds.n() {
+            return false;
+        }
+        let p = ds.p;
+        ds.remove(idx);
+        // a checkpoint of the first `rows` examples survives iff it
+        // contains no removed row, i.e. rows <= idx
+        while self.ckpts.last().is_some_and(|c| c.rows > idx) {
+            self.ckpts.pop();
+        }
+        let from = match self.ckpts.last() {
+            Some(c) => {
+                self.gram_acc = c.gram.clone();
+                self.xty = c.xty.clone();
+                c.rows
+            }
+            None => {
+                self.gram_acc = Mat::zeros(p, p);
+                self.xty = vec![0.0; p];
+                0
+            }
+        };
+        self.accum_rows(from);
+        self.finalize();
+        true
     }
 
     pub fn n(&self) -> usize {
@@ -173,6 +299,14 @@ impl CpRegressor for RidgeCp {
     fn n(&self) -> usize {
         RidgeCp::n(self)
     }
+
+    fn learn(&mut self, x: &[f64], y: f64) -> bool {
+        RidgeCp::learn(self, x, y)
+    }
+
+    fn unlearn(&mut self, idx: usize) -> bool {
+        RidgeCp::unlearn(self, idx)
+    }
 }
 
 #[cfg(test)]
@@ -275,6 +409,108 @@ mod tests {
             r.p_values_batch(&xs[..1], &[probe.y[0]]),
             vec![r.p_value(xs[0], probe.y[0])]
         );
+    }
+
+    fn coefs_identical(a: &Coefficients, b: &Coefficients) -> bool {
+        a.1.to_bits() == b.1.to_bits()
+            && a.2.to_bits() == b.2.to_bits()
+            && a.0.len() == b.0.len()
+            && a.0.iter().zip(&b.0).all(|(u, v)| {
+                u.0.to_bits() == v.0.to_bits() && u.1.to_bits() == v.1.to_bits()
+            })
+    }
+
+    fn assert_matches_fresh(r: &RidgeCp, d: &RegressionDataset) {
+        let mut fresh = RidgeCp::new(r.rho);
+        fresh.fit(d);
+        let probe = ds(4, 99);
+        for i in 0..probe.n() {
+            assert!(
+                coefs_identical(
+                    &r.coefficients(probe.row(i)),
+                    &fresh.coefficients(probe.row(i)),
+                ),
+                "probe {i} diverged from fresh fit (n={})",
+                d.n()
+            );
+        }
+    }
+
+    #[test]
+    fn learn_matches_refit_bitwise() {
+        let d = ds(30, 11);
+        let extra = ds(5, 12);
+        let mut r = RidgeCp::new(1.0);
+        r.fit(&d);
+        let mut grown = d.clone();
+        for i in 0..extra.n() {
+            assert!(r.learn(extra.row(i), extra.y[i]));
+            grown.push(extra.row(i), extra.y[i]);
+            assert_matches_fresh(&r, &grown);
+        }
+        assert_eq!(r.n(), 35);
+    }
+
+    #[test]
+    fn unlearn_matches_refit_bitwise_across_checkpoints() {
+        // n > 2*CKPT_EVERY so removals land before, between, and after
+        // checkpoint boundaries (64, 128)
+        let d = ds(150, 13);
+        let mut r = RidgeCp::new(0.5);
+        r.fit(&d);
+        let mut reduced = d.clone();
+        for idx in [149, 0, 64, 70, 128, 5] {
+            assert!(r.unlearn(idx), "idx {idx}");
+            reduced.remove(idx);
+            assert_matches_fresh(&r, &reduced);
+        }
+        assert_eq!(r.n(), 144);
+        assert!(!r.unlearn(144));
+    }
+
+    #[test]
+    fn learn_unlearn_roundtrip_bit_identical() {
+        let d = ds(64, 14); // boundary n: learn pushes a checkpoint
+        let mut r = RidgeCp::new(2.0);
+        r.fit(&d);
+        let probe = ds(3, 15);
+        let before: Vec<Coefficients> =
+            (0..probe.n()).map(|i| r.coefficients(probe.row(i))).collect();
+        let z = ds(1, 16);
+        for _ in 0..3 {
+            assert!(r.learn(z.row(0), z.y[0]));
+            assert!(r.unlearn(64));
+            for (i, want) in before.iter().enumerate() {
+                assert!(coefs_identical(&r.coefficients(probe.row(i)), want));
+            }
+        }
+    }
+
+    #[test]
+    fn unlearn_to_empty_and_relearn() {
+        let d = ds(3, 17);
+        let mut r = RidgeCp::new(1.0);
+        r.fit(&d);
+        assert!(r.unlearn(2));
+        assert!(r.unlearn(0));
+        assert!(r.unlearn(0));
+        assert_eq!(r.n(), 0);
+        assert!(!r.unlearn(0));
+        // G = rho I stays invertible; relearning rebuilds from zero
+        assert!(r.learn(d.row(0), d.y[0]));
+        let mut fresh = RidgeCp::new(1.0);
+        fresh.fit(&RegressionDataset::new(
+            d.row(0).to_vec(),
+            vec![d.y[0]],
+            d.p,
+        ));
+        let probe = ds(2, 18);
+        for i in 0..probe.n() {
+            assert!(coefs_identical(
+                &r.coefficients(probe.row(i)),
+                &fresh.coefficients(probe.row(i)),
+            ));
+        }
     }
 
     #[test]

@@ -542,3 +542,249 @@ fn per_deployment_hyperparameters_round_trip() {
     send(&mut conn, r#"{"op":"shutdown"}"#);
     handle.join().unwrap().unwrap();
 }
+
+/// Acceptance (ISSUE 10): `op:"unlearn"` against ridge and k-NN
+/// regression deployments succeeds over TCP, and subsequent
+/// `predict_region` answers are bit-identical to a server freshly
+/// trained on the reduced set (the wire uses shortest-round-trip float
+/// formatting, so decoded-f64 equality is bit equality for finite
+/// endpoints).
+#[test]
+fn tcp_regression_unlearn_matches_fresh_server() {
+    let n = 40;
+    let reg = mixed_registry(n);
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 2,
+            max_wait_us: 200,
+            ..Default::default()
+        },
+        reg,
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv2 = server.clone();
+    let handle = std::thread::spawn(move || serve(srv2, listener));
+    let mut conn = TcpStream::connect(addr).unwrap();
+
+    // the same regression set mixed_registry trains on, with rows 17
+    // then 0 removed (matching the unlearn sequence below)
+    let mut reduced = make_regression(
+        &RegressionSpec {
+            n_samples: n,
+            n_features: 4,
+            n_informative: 3,
+            noise: 3.0,
+        },
+        5,
+    );
+    reduced.remove(17);
+    reduced.remove(0);
+    let cfg = MeasureConfig {
+        k: 3,
+        ..Default::default()
+    };
+    for (dep, kind) in
+        [("reg", RegressorKind::Knn), ("rrcm", RegressorKind::Ridge)]
+    {
+        for (step, idx) in [17usize, 0].into_iter().enumerate() {
+            let resp = send(
+                &mut conn,
+                &format!(
+                    r#"{{"op":"unlearn","deployment":"{dep}","index":{idx}}}"#
+                ),
+            );
+            assert_eq!(
+                resp.get("ok").and_then(Json::as_bool),
+                Some(true),
+                "{dep} idx {idx}: {}",
+                resp.encode()
+            );
+            assert_eq!(
+                resp.get("n_train").and_then(Json::as_f64),
+                Some((n - 1 - step) as f64),
+                "{dep} idx {idx}"
+            );
+        }
+        let fresh =
+            Deployment::train_regression(dep, kind, &cfg, &reduced, None);
+        let x = [0.3, -0.1, 0.2, 0.05];
+        let want = fresh.predict_region(&x, 0.1, Some(1.0)).unwrap();
+        let resp = send(
+            &mut conn,
+            &format!(
+                r#"{{"op":"predict_region","deployment":"{dep}","x":[0.3,-0.1,0.2,0.05],"epsilon":0.1,"y":1.0}}"#
+            ),
+        );
+        let ivs = resp
+            .get("intervals")
+            .unwrap_or_else(|| panic!("{dep}: {}", resp.encode()))
+            .as_arr()
+            .unwrap();
+        assert_eq!(ivs.len(), want.region.intervals.len(), "{dep}");
+        for (iv, w) in ivs.iter().zip(&want.region.intervals) {
+            assert_eq!(iv.as_f64_vec().unwrap(), vec![w.lo, w.hi], "{dep}");
+        }
+        assert_eq!(
+            resp.get("p_value").and_then(Json::as_f64),
+            want.p_at_y,
+            "{dep}"
+        );
+    }
+    let bye = send(&mut conn, r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    handle.join().unwrap().unwrap();
+}
+
+/// Bad-index unlearns on regression deployments come back as structured
+/// wire errors and increment the per-deployment unlearn error counter
+/// (asserted through `op:"stats"`).
+#[test]
+fn regression_unlearn_errors_are_structured_and_counted() {
+    let reg = mixed_registry(30);
+    let server = Arc::new(Server::start(ServeConfig::default(), reg));
+    // out-of-range index: structured error naming the bound
+    let resp = server.handle(
+        &Json::parse(r#"{"op":"unlearn","deployment":"rrcm","index":9999}"#)
+            .unwrap(),
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    let msg = resp.get("error").and_then(Json::as_str).unwrap();
+    assert!(
+        msg.contains("out of range") && msg.contains("n_train"),
+        "{msg}"
+    );
+    // missing index: structured error, counted globally but not against
+    // a deployment (the request names none to charge it to)
+    let resp = server.handle(
+        &Json::parse(r#"{"op":"unlearn","deployment":"rrcm"}"#).unwrap(),
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    // a successful unlearn for contrast
+    let resp = server.handle(
+        &Json::parse(r#"{"op":"unlearn","deployment":"rrcm","index":0}"#)
+            .unwrap(),
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(resp.get("n_train").and_then(Json::as_f64), Some(29.0));
+    assert_eq!(resp.get("version").and_then(Json::as_f64), Some(1.0));
+    // obs: the rrcm unlearn block saw 2 charged requests, 1 error
+    let stats = server.handle(
+        &Json::parse(r#"{"op":"stats","deployment":"rrcm"}"#).unwrap(),
+    );
+    let un = stats
+        .get("deployments")
+        .unwrap()
+        .get("rrcm")
+        .unwrap()
+        .get("ops")
+        .unwrap()
+        .get("unlearn")
+        .unwrap();
+    assert_eq!(un.get("requests").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(un.get("errors").and_then(Json::as_f64), Some(1.0));
+}
+
+/// An unlearn riding in while a large predict_region batch is in
+/// flight: the batcher reacquires the registry read lock every
+/// LOCK_CHUNK = 16 jobs, so the unlearn's write lock waits for at most
+/// one sub-chunk instead of the whole queue. Functionally: the unlearn
+/// completes under load, and every concurrent answer equals either the
+/// pre- or the post-unlearn reference exactly — never a torn state.
+#[test]
+fn unlearn_interleaved_with_inflight_predicts_is_exact() {
+    let n = 40;
+    let reg = mixed_registry(n);
+    let x = [0.3, -0.1, 0.2, 0.05];
+    let before = reg
+        .with("reg", |d| d.predict_region(&x, 0.1, None))
+        .unwrap()
+        .unwrap();
+    let mut reduced = make_regression(
+        &RegressionSpec {
+            n_samples: n,
+            n_features: 4,
+            n_informative: 3,
+            noise: 3.0,
+        },
+        5,
+    );
+    reduced.remove(n - 1);
+    let cfg = MeasureConfig {
+        k: 3,
+        ..Default::default()
+    };
+    let fresh = Deployment::train_regression(
+        "reg",
+        RegressorKind::Knn,
+        &cfg,
+        &reduced,
+        None,
+    );
+    let after = fresh.predict_region(&x, 0.1, None).unwrap();
+    let to_rows = |r: &exact_cp::coordinator::state::RegionAnswer| {
+        r.region
+            .intervals
+            .iter()
+            .map(|i| vec![i.lo, i.hi])
+            .collect::<Vec<_>>()
+    };
+    let (pre, post) = (to_rows(&before), to_rows(&after));
+
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 1,
+            max_batch: 16,
+            max_wait_us: 2_000,
+            ..Default::default()
+        },
+        reg,
+    ));
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..32 {
+            let srv = server.clone();
+            handles.push(s.spawn(move || {
+                let req = Json::parse(
+                    r#"{"op":"predict_region","deployment":"reg","x":[0.3,-0.1,0.2,0.05],"epsilon":0.1}"#,
+                )
+                .unwrap();
+                srv.handle(&req)
+            }));
+        }
+        let srv = server.clone();
+        let un = s.spawn(move || {
+            let req = Json::parse(&format!(
+                r#"{{"op":"unlearn","deployment":"reg","index":{}}}"#,
+                n - 1
+            ))
+            .unwrap();
+            srv.handle(&req)
+        });
+        let resp = un.join().unwrap();
+        assert_eq!(
+            resp.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "{}",
+            resp.encode()
+        );
+        assert_eq!(
+            resp.get("n_train").and_then(Json::as_f64),
+            Some((n - 1) as f64)
+        );
+        for h in handles {
+            let resp = h.join().unwrap();
+            let ivs = resp
+                .get("intervals")
+                .unwrap_or_else(|| panic!("{}", resp.encode()))
+                .as_arr()
+                .unwrap();
+            let got: Vec<Vec<f64>> =
+                ivs.iter().map(|iv| iv.as_f64_vec().unwrap()).collect();
+            assert!(
+                got == pre || got == post,
+                "torn answer: {got:?} (pre {pre:?}, post {post:?})"
+            );
+        }
+    });
+}

@@ -63,45 +63,47 @@ def dist(u, v):
     return math.sqrt(sum((a - b) ** 2 for a, b in zip(u, v)))
 
 
-def knn_coefs(x):
-    """Explicit k-NN CP coefficients for test object x."""
+def knn_coefs(xs, ys, x):
+    """Explicit k-NN CP coefficients for test object x on (xs, ys)."""
+    n = len(ys)
     coefs = []
-    d_test = [dist(X[i], x) for i in range(N)]
-    for i in range(N):
+    d_test = [dist(xs[i], x) for i in range(n)]
+    for i in range(n):
         items = sorted(
-            ((dist(X[i], X[j]), j) for j in range(N) if j != i)
+            ((dist(xs[i], xs[j]), j) for j in range(n) if j != i)
         )
         # neighbour selection must be decided by a clear margin
         assert items[K][0] - items[K - 1][0] > 1e-7, "kNN tie at boundary"
-        sum_k = sum(Y[j] for _, j in items[:K])
-        sum_k1 = sum(Y[j] for _, j in items[: K - 1])
+        sum_k = sum(ys[j] for _, j in items[:K])
+        sum_k1 = sum(ys[j] for _, j in items[: K - 1])
         delta_k = items[K - 1][0]
         assert abs(d_test[i] - delta_k) > 1e-7, "entry decision too close"
         if d_test[i] < delta_k:
-            coefs.append((Y[i] - sum_k1 / K, -1.0 / K))
+            coefs.append((ys[i] - sum_k1 / K, -1.0 / K))
         else:
-            coefs.append((Y[i] - sum_k / K, 0.0))
-    items = sorted((d_test[j], j) for j in range(N))
+            coefs.append((ys[i] - sum_k / K, 0.0))
+    items = sorted((d_test[j], j) for j in range(n))
     assert items[K][0] - items[K - 1][0] > 1e-7, "test kNN tie at boundary"
-    a = -sum(Y[j] for _, j in items[:K]) / K
+    a = -sum(ys[j] for _, j in items[:K]) / K
     return coefs, a, 1.0
 
 
-def ridge_coefs(x):
-    """Explicit augmented-hat-matrix RRCM coefficients."""
-    xa = np.vstack([np.array(X, dtype=float), np.array(x, dtype=float)])
+def ridge_coefs(xs, ys, x):
+    """Explicit augmented-hat-matrix RRCM coefficients on (xs, ys)."""
+    n = len(ys)
+    xa = np.vstack([np.array(xs, dtype=float), np.array(x, dtype=float)])
     minv = np.linalg.inv(xa.T @ xa + RHO * np.eye(P))
-    y0 = np.append(np.array(Y, dtype=float), 0.0)
-    e = np.zeros(N + 1)
-    e[N] = 1.0
+    y0 = np.append(np.array(ys, dtype=float), 0.0)
+    e = np.zeros(n + 1)
+    e[n] = 1.0
     w_a = minv @ (xa.T @ y0)
     w_b = minv @ (xa.T @ e)
     coefs = [
         (y0[i] - float(xa[i] @ w_a), e[i] - float(xa[i] @ w_b))
-        for i in range(N)
+        for i in range(n)
     ]
-    a = y0[N] - float(xa[N] @ w_a)
-    b = e[N] - float(xa[N] @ w_b)
+    a = y0[n] - float(xa[n] @ w_a)
+    b = e[n] - float(xa[n] @ w_b)
     return coefs, a, b
 
 
@@ -167,7 +169,7 @@ print(f"const CAND_Y: [f64; 4] = [\n    {fmt(CAND_Y)},\n];")
 for name, fn in (("KNN", knn_coefs), ("RIDGE", ridge_coefs)):
     golden, pvals = [], []
     for probe, cy in zip(PROBES, CAND_Y):
-        coefs, a, b = fn(probe)
+        coefs, a, b = fn(X, Y, probe)
         per_eps = []
         for eps in EPSES:
             per_eps.append(region(coefs, a, b, eps))
@@ -187,5 +189,59 @@ for name, fn in (("KNN", knn_coefs), ("RIDGE", ridge_coefs)):
     print("];")
     print(
         f"const {name}_PVALS: [f64; 4] = [{', '.join(repr(p) for p in pvals)}];"
+    )
+
+# ---------------------------------------------------------------------
+# Scripted learn/unlearn sequence (decremental serving golden).
+#
+# The Rust test replays the SAME op script against the online
+# learn/unlearn paths of each regressor; the reference recomputes every
+# step from scratch on the mutated dataset — so any drift the journal
+# or neighbour-statistics maintenance accumulates across a realistic
+# grow/shrink sequence shows up as a per-step diff, not just at the end.
+# ---------------------------------------------------------------------
+SEQ_LEARN_X = [0.5, -1.2, 0.8]
+SEQ_LEARN_Y = 2.05
+# (op, index): unlearn of last / first / middle rows around one learn
+SEQ = [("unlearn", 23), ("unlearn", 0), ("learn", None), ("unlearn", 11)]
+
+
+def seq_states():
+    xs = [list(r) for r in X]
+    ys = list(Y)
+    for op, idx in SEQ:
+        if op == "unlearn":
+            xs.pop(idx)
+            ys.pop(idx)
+        else:
+            xs.append(list(SEQ_LEARN_X))
+            ys.append(SEQ_LEARN_Y)
+        yield [list(r) for r in xs], list(ys)
+
+
+print(f"const SEQ_LEARN_X: [f64; {P}] = [{', '.join(repr(float(v)) for v in SEQ_LEARN_X)}];")
+print(f"const SEQ_LEARN_Y: f64 = {SEQ_LEARN_Y!r};")
+print("/// (is_unlearn, index) per step; learn steps push (SEQ_LEARN_X, SEQ_LEARN_Y).")
+print(f"const SEQ_OPS: [(bool, usize); {len(SEQ)}] = [" + ", ".join(
+    f"({'true' if op == 'unlearn' else 'false'}, {idx if idx is not None else 0})"
+    for op, idx in SEQ
+) + "];")
+for name, fn in (("KNN", knn_coefs), ("RIDGE", ridge_coefs)):
+    pvals, regs = [], []
+    for xs, ys in seq_states():
+        coefs, a, b = fn(xs, ys, PROBES[0])
+        assert tie_margin(coefs, a, b, CAND_Y[0]) > 1e-7, "seq tie too close"
+        pvals.append(p_value(coefs, a, b, CAND_Y[0]))
+        regs.append(region(coefs, a, b, EPSES[0]))
+    print(f"/// Per-step goldens at probe 0 after each SEQ_OPS step (eps = {EPSES[0]}).")
+    print(f"#[rustfmt::skip]")
+    print(f"const SEQ_{name}_REGIONS: [&[(f64, f64)]; {len(SEQ)}] = [")
+    for ivs in regs:
+        body = ", ".join(f"({repr(lo)}, {repr(hi)})" for lo, hi in ivs)
+        print(f"    &[{body}],")
+    print("];")
+    print(
+        f"const SEQ_{name}_PVALS: [f64; {len(SEQ)}] = "
+        f"[{', '.join(repr(p) for p in pvals)}];"
     )
 print("// ---- end GENERATED ----")

@@ -286,7 +286,16 @@ fn prop_pvalues_in_valid_range() {
 
 #[test]
 fn prop_learn_unlearn_roundtrip_is_identity() {
-    // learning a point then unlearning it restores all p-values
+    // Learning a point then unlearning it restores all p-values for
+    // every classification measure that supports decremental updates.
+    //
+    // Tolerance, not bitwise: classification measures maintain their
+    // state incrementally in *insertion order* (KBest running sums,
+    // KDE's `prelim -= k` subtraction, LS-SVM rank-1 downdates), so an
+    // unlearn is algebraically — but not FP-bitwise — the inverse of a
+    // learn. Only the regression side replays sums in canonical order
+    // and therefore promises bit identity (see EXACTNESS.md
+    // "Decremental paths" and the prop_regressor_* tests below).
     check("learn-unlearn-identity", 25, |c| {
         let train = dataset(c);
         let probe = dataset(Case {
@@ -298,7 +307,12 @@ fn prop_learn_unlearn_roundtrip_is_identity() {
             k: c.k,
             ..Default::default()
         };
-        for kind in [MeasureKind::SimplifiedKnn, MeasureKind::Kde] {
+        for kind in [
+            MeasureKind::SimplifiedKnn,
+            MeasureKind::Knn,
+            MeasureKind::Kde,
+            MeasureKind::LsSvm,
+        ] {
             let mut m = build_measure(kind, &cfg, None);
             m.fit(&train);
             let before: Vec<f64> = (0..probe.n())
@@ -319,10 +333,12 @@ fn prop_learn_unlearn_roundtrip_is_identity() {
                         .collect::<Vec<_>>()
                 })
                 .collect();
+            // 1e-8 matches the per-measure online tests (LS-SVM's
+            // rank-1 downdate is the least precise of the family)
             if before
                 .iter()
                 .zip(&after)
-                .any(|(a, b)| (a - b).abs() > 1e-9)
+                .any(|(a, b)| (a - b).abs() > 1e-8)
             {
                 return false;
             }
@@ -660,4 +676,197 @@ fn prop_region_sweep_equals_direct_pvalue() {
             );
         }
     }
+}
+
+/// One fresh (unfitted) regressor of each kind, in a fixed order.
+fn fresh_regressors(k: usize) -> Vec<Box<dyn CpRegressor>> {
+    vec![
+        Box::new(KnnRegressorStandard::new(k)),
+        Box::new(KnnRegressorOptimized::new(k)),
+        Box::new(RidgeCp::new(1.0)),
+    ]
+}
+
+#[test]
+fn prop_regressor_learn_unlearn_roundtrip_bitwise() {
+    // THE decremental contract, identity half: for every regressor kind
+    // learn(z) followed by unlearn(last) restores the coefficients BIT
+    // FOR BIT — the ridge journal and the canonical-order neighbour
+    // statistics replay the exact FP op sequence of the original fit.
+    // Repeated rounds catch state leaking across the round trip.
+    check("reg-learn-unlearn-roundtrip", 12, |c| {
+        let train = reg_dataset(c.n, c.p, c.seed);
+        let probe = reg_dataset(4, c.p, c.seed + 7);
+        let xs: Vec<&[f64]> = (0..probe.n()).map(|i| probe.row(i)).collect();
+        let k = c.k.min(c.n - 1).max(1);
+        for mut m in fresh_regressors(k) {
+            m.fit(&train);
+            let before: Vec<Coefficients> =
+                xs.iter().map(|x| m.coefficients(x)).collect();
+            let z = probe.row(0).to_vec();
+            for _ in 0..3 {
+                if !m.learn(&z, 1.25) || !m.unlearn(train.n()) {
+                    return false;
+                }
+            }
+            if m.n() != train.n() {
+                return false;
+            }
+            for (x, want) in xs.iter().zip(&before) {
+                if !coefs_identical(&m.coefficients(x), want) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_regressor_unlearn_matches_fresh_fit_bitwise() {
+    // THE decremental contract, refit half: after each unlearn(idx) the
+    // live regressor serves coefficients bit-identical to a fresh fit
+    // on the reduced training set — at the edge indices (last, first,
+    // middle) applied in sequence, for every regressor kind. Out-of-
+    // range unlearns must be rejected without mutating state.
+    check("reg-unlearn-vs-fresh", 10, |c| {
+        let train = reg_dataset(c.n, c.p, c.seed);
+        let probe = reg_dataset(3, c.p, c.seed + 11);
+        let xs: Vec<&[f64]> = (0..probe.n()).map(|i| probe.row(i)).collect();
+        // three removals shrink n by 3; keep k valid for the smallest set
+        let k = c.k.min(c.n.saturating_sub(4)).max(1);
+        let idxs = [c.n - 1, 0, (c.n - 2) / 2];
+        for mi in 0..3 {
+            let mut live = fresh_regressors(k).swap_remove(mi);
+            live.fit(&train);
+            let mut reduced = train.clone();
+            for &idx in &idxs {
+                if !live.unlearn(idx) {
+                    return false;
+                }
+                reduced.remove(idx);
+                let mut fresh = fresh_regressors(k).swap_remove(mi);
+                fresh.fit(&reduced);
+                for x in &xs {
+                    if !coefs_identical(
+                        &live.coefficients(x),
+                        &fresh.coefficients(x),
+                    ) {
+                        return false;
+                    }
+                }
+            }
+            if live.unlearn(reduced.n()) {
+                return false; // out of range must be rejected
+            }
+            if live.n() != reduced.n() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_regressor_interleaved_online_matches_fresh_fit() {
+    // Random interleavings of learn and unlearn (including repeated
+    // removals at index 0) track a mirror dataset; after every step the
+    // live regressor must serve bit-identically to a fresh fit on the
+    // mirror. This is the serving coordinator's actual op sequence.
+    check("reg-interleaved-online", 8, |c| {
+        let train = reg_dataset(c.n, c.p, c.seed);
+        let probe = reg_dataset(3, c.p, c.seed + 13);
+        let xs: Vec<&[f64]> = (0..probe.n()).map(|i| probe.row(i)).collect();
+        let k = c.k.min(c.n.saturating_sub(4)).max(1);
+        let mut rng = Rng::seed_from(c.seed ^ 0xD1CE);
+        for mi in 0..3 {
+            let mut live = fresh_regressors(k).swap_remove(mi);
+            live.fit(&train);
+            let mut mirror = train.clone();
+            for step in 0..6 {
+                if rng.below(2) == 0 || mirror.n() <= k + 1 {
+                    let x: Vec<f64> =
+                        (0..c.p).map(|_| rng.normal() * 2.0).collect();
+                    let y = rng.normal() * 5.0;
+                    if !live.learn(&x, y) {
+                        return false;
+                    }
+                    mirror.push(&x, y);
+                } else {
+                    // bias towards the edges: 0, last, then random
+                    let idx = match step % 3 {
+                        0 => 0,
+                        1 => mirror.n() - 1,
+                        _ => rng.below(mirror.n()),
+                    };
+                    if !live.unlearn(idx) {
+                        return false;
+                    }
+                    mirror.remove(idx);
+                }
+                let mut fresh = fresh_regressors(k).swap_remove(mi);
+                fresh.fit(&mirror);
+                for x in &xs {
+                    if !coefs_identical(
+                        &live.coefficients(x),
+                        &fresh.coefficients(x),
+                    ) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_measure_unlearn_matches_fresh_fit() {
+    // Classification counterpart of reg-unlearn-vs-fresh at the
+    // documented tolerance (see prop_learn_unlearn_roundtrip_is_identity
+    // for why classification is not bitwise): unlearning the first and
+    // last training examples must track a fresh fit on the reduced set.
+    check("measure-unlearn-vs-fresh", 10, |c| {
+        let train = dataset(c);
+        let probe = dataset(Case {
+            n: 3,
+            seed: c.seed + 17,
+            ..c
+        });
+        let cfg = MeasureConfig {
+            k: c.k,
+            ..Default::default()
+        };
+        for kind in [
+            MeasureKind::SimplifiedKnn,
+            MeasureKind::Knn,
+            MeasureKind::Kde,
+            MeasureKind::LsSvm,
+        ] {
+            let mut live = build_measure(kind, &cfg, None);
+            live.fit(&train);
+            let mut reduced = train.clone();
+            for idx in [reduced.n() - 1, 0] {
+                if !live.unlearn(idx) {
+                    return false;
+                }
+                reduced.remove(idx);
+                let mut fresh = build_measure(kind, &cfg, None);
+                fresh.fit(&reduced);
+                for i in 0..probe.n() {
+                    for y in 0..train.n_labels {
+                        let a = p_value(&live.scores(probe.row(i), y));
+                        let b = p_value(&fresh.scores(probe.row(i), y));
+                        if (a - b).abs() > 1e-8 {
+                            return false;
+                        }
+                    }
+                }
+            }
+            if live.unlearn(reduced.n()) {
+                return false; // out of range must be rejected
+            }
+        }
+        true
+    });
 }

@@ -5,13 +5,17 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use exact_cp::config::{MeasureConfig, MeasureKind, ObsConfig, ServeConfig};
 use exact_cp::coordinator::server::{serve, Server};
 use exact_cp::coordinator::state::{Deployment, Registry};
 use exact_cp::data::{make_classification, ClassificationSpec};
 use exact_cp::util::json::Json;
+
+/// Tests that flip the process-global trace switch serialize on this
+/// lock (the ring and the enabled flag are shared process state).
+static TRACE_GATE: Mutex<()> = Mutex::new(());
 
 fn send(stream: &mut TcpStream, req: &str) -> Json {
     stream.write_all(req.as_bytes()).unwrap();
@@ -26,6 +30,7 @@ fn send(stream: &mut TcpStream, req: &str) -> Json {
 
 #[test]
 fn smoke_predict_stats_trace_over_tcp() {
+    let _gate = TRACE_GATE.lock().unwrap();
     let ds = make_classification(
         &ClassificationSpec {
             n_samples: 60,
@@ -104,6 +109,95 @@ fn smoke_predict_stats_trace_over_tcp() {
         assert!(e.get("name").and_then(Json::as_str).is_some());
         assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
     }
+
+    let bye = send(&mut conn, r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    handle.join().unwrap().unwrap();
+    exact_cp::obs::trace::set_enabled(false);
+}
+
+/// Regression-deployment smoke: boot the TCP front end with tracing on,
+/// drive predict_region + unlearn (ok and out-of-range) over the wire,
+/// and assert the documented shapes (PROTOCOL.md "unlearn") — including
+/// the per-deployment unlearn op block now firing for regression.
+#[test]
+fn smoke_regression_unlearn_over_tcp() {
+    let _gate = TRACE_GATE.lock().unwrap();
+    use exact_cp::config::RegressorKind;
+    use exact_cp::data::{make_regression, RegressionSpec};
+
+    let rds = make_regression(
+        &RegressionSpec {
+            n_samples: 50,
+            n_features: 4,
+            n_informative: 3,
+            noise: 3.0,
+        },
+        9,
+    );
+    let reg = Arc::new(Registry::new());
+    reg.insert(Deployment::train_regression(
+        "rrcm",
+        RegressorKind::Ridge,
+        &MeasureConfig::default(),
+        &rds,
+        None,
+    ));
+    let server = Arc::new(Server::start(
+        ServeConfig {
+            workers: 2,
+            max_wait_us: 200,
+            obs: ObsConfig {
+                trace: true,
+                ring_capacity: 4096,
+                epsilons: vec![0.1],
+            },
+            ..Default::default()
+        },
+        reg,
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv2 = server.clone();
+    let handle = std::thread::spawn(move || serve(srv2, listener));
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+
+    // decremental update: ok:true, shrunken n_train, bumped version
+    let resp = send(
+        &mut conn,
+        r#"{"op":"unlearn","deployment":"rrcm","index":49}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(resp.get("n_train").and_then(Json::as_f64), Some(49.0));
+    assert_eq!(resp.get("version").and_then(Json::as_f64), Some(1.0));
+
+    // out-of-range: ok:false with a structured error string
+    let resp = send(
+        &mut conn,
+        r#"{"op":"unlearn","deployment":"rrcm","index":49}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(resp
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("out of range"));
+
+    // serving still works on the reduced set
+    let resp = send(
+        &mut conn,
+        r#"{"op":"predict_region","deployment":"rrcm","x":[0.2,0.1,0.0,0.3],"epsilon":0.1}"#,
+    );
+    assert!(resp.get("intervals").is_some(), "{}", resp.encode());
+
+    // stats: the regression deployment's unlearn op block fired
+    let stats = send(&mut conn, r#"{"op":"stats"}"#);
+    let dep = stats.get("deployments").unwrap().get("rrcm").unwrap();
+    let un = dep.get("ops").unwrap().get("unlearn").unwrap();
+    assert_eq!(un.get("requests").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(un.get("errors").and_then(Json::as_f64), Some(1.0));
+    assert!(un.get("latency_us").is_some());
 
     let bye = send(&mut conn, r#"{"op":"shutdown"}"#);
     assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));

@@ -41,6 +41,8 @@ pub const BLESSED: &[(&str, &[&str])] = &[
             "tmatvec",
             "matmul",
             "gram",
+            "gram_accum_row",
+            "tmatvec_accum_row",
             "add_diag",
             "rank1_update",
             "dot",
